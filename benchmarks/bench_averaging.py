@@ -1,0 +1,19 @@
+"""Paper Fig. 4: averaging variants on non-iid data — server+client
+averaging (the paper's choice) vs one-sided variants."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=14,
+                    swt=10.0)
+    for mode in ("both", "server_only", "client_only"):
+        r = run_quafl(fed, rounds, iid=False, eval_every=rounds // 6,
+                      avg_mode=mode)
+        emit(f"avg_{mode}", r["us_per_round"],
+             f"acc={r['hist'][-1][3]:.3f};loss={r['hist'][-1][2]:.3f}")
+        emit_curve(f"avg_{mode}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig. 2 / 19: impact of quantization bits b (saturation above ~10)."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    for b in (6, 8, 10, 32):
+        fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=b,
+                        quantizer="none" if b == 32 else "lattice", swt=10.0)
+        r = run_quafl(fed, rounds, eval_every=rounds // 6)
+        final = r["hist"][-1]
+        emit(f"bits_b{b}", r["us_per_round"],
+             f"acc={final[3]:.3f};loss={final[2]:.3f};bits={final[4]:.3g}")
+        emit_curve(f"bits_b{b}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Lemma 3.8 / §3.2: communication-bit accounting. QuAFL sends
+O(sT·(d·b)) bits vs FedAvg's 2sT·d·32 — report the measured ratio."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, run_fedavg, run_quafl
+
+
+def main(rounds: int = 30):
+    fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=8,
+                    swt=10.0)
+    rq = run_quafl(fed, rounds, eval_every=rounds)
+    rf = run_fedavg(fed, rounds, eval_every=rounds)
+    bq = rq["hist"][-1][4]
+    bf = rf["hist"][-1][4]
+    emit("bits_quafl", rq["us_per_round"], f"bits={bq:.4g}")
+    emit("bits_fedavg", rf["us_per_round"], f"bits={bf:.4g}")
+    emit("bits_ratio", 0.0,
+         f"fedavg_over_quafl={bf/bq:.2f};expected~{2*32/((fed.s+1)/fed.s*8):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference.
+
+On CPU the interpret-mode timing is NOT a TPU projection — the derived
+column therefore reports the analytic FLOP/byte counts used by the roofline
+model, plus wall-time of the jnp reference path for regression tracking."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.rotation import rotate
+from repro.kernels.ref import flash_attention_ref, hadamard_ref
+from benchmarks.common import emit
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # rotation over a 10M-param model vector
+    d = 10_000_000
+    x = jax.random.normal(key, (d,))
+    rot = jax.jit(lambda v: rotate(v, key))
+    us = _time(rot, x)
+    flops = 2 * d * (128 + 128)  # two 128-matmuls per element block
+    emit("rotate_10M", us, f"flops={flops:.3g};bytes={d*4*2:.3g}")
+
+    # flash attention tile at the prefill_32k working point (scaled down)
+    b, t, h, kv, dh = 1, 2048, 8, 2, 128
+    q = jax.random.normal(key, (b, t, h, dh), jnp.bfloat16)
+    k = jax.random.normal(key, (b, t, kv, dh), jnp.bfloat16)
+    v = jax.random.normal(key, (b, t, kv, dh), jnp.bfloat16)
+    att = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    us = _time(att, q, k, v)
+    emit("attention_ref_2k", us,
+         f"flops={4*b*h*t*t*dh:.3g};bytes={(q.size+k.size+v.size)*2:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Paper Fig. 7 / 17: impact of the max local steps K."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    for K in (2, 5, 10):
+        fed = FedConfig(n_clients=16, s=4, local_steps=K, lr=0.3, bits=14,
+                        swt=10.0)
+        r = run_quafl(fed, rounds, eval_every=rounds // 6)
+        emit(f"K{K}", r["us_per_round"],
+             f"acc={r['hist'][-1][3]:.3f};loss={r['hist'][-1][2]:.3f}")
+        emit_curve(f"K{K}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Paper Fig. 1 / 8 / 18: impact of the number of sampled peers s on
+convergence (non-iid data, 30% slow clients)."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    for s in (2, 4, 8):
+        fed = FedConfig(n_clients=16, s=s, local_steps=5, lr=0.3, bits=14,
+                        swt=10.0)
+        r = run_quafl(fed, rounds, iid=False, eval_every=rounds // 6)
+        final = r["hist"][-1]
+        emit(f"peers_s{s}", r["us_per_round"],
+             f"acc={final[3]:.3f};loss={final[2]:.3f}")
+        emit_curve(f"peers_s{s}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig. 5 / 16: lattice (position-aware) vs QSGD quantization inside
+QuAFL at the same bit width."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    for quant in ("lattice", "qsgd"):
+        fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=8,
+                        quantizer=quant, swt=10.0)
+        r = run_quafl(fed, rounds, eval_every=rounds // 6)
+        emit(f"quant_{quant}", r["us_per_round"],
+             f"acc={r['hist'][-1][3]:.3f};loss={r['hist'][-1][2]:.3f}")
+        emit_curve(f"quant_{quant}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

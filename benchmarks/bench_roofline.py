@@ -1,0 +1,58 @@
+"""Render the roofline table (§Roofline of EXPERIMENTS.md) from the dry-run
+JSON artifacts in experiments/dryrun/. Also usable as a module:
+``python -m benchmarks.bench_roofline --md`` prints the markdown table."""
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def markdown_table(rows, mesh="single"):
+    done = [r for r in rows if "roofline" in r
+            and (mesh in ("all",) or r.get("mesh", {}) and
+                 (("pod" in r["mesh"]) == (mesh == "multi")))]
+    done.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL_FLOPS/HLO | bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in done:
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['bottleneck']} | "
+            f"{ratio:.3f} | {r['bytes_per_device']:.3g} |"
+            if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    ok = [r for r in rows if "roofline" in r]
+    skipped = [r for r in rows if "skipped" in r]
+    failed = [r for r in rows if "error" in r]
+    emit("dryrun_pairs_ok", 0.0, f"count={len(ok)}")
+    emit("dryrun_pairs_skipped", 0.0, f"count={len(skipped)}")
+    emit("dryrun_pairs_failed", 0.0, f"count={len(failed)}")
+    for r in failed:
+        emit(f"FAILED_{r['arch']}_{r['shape']}", 0.0, r["error"][:80])
+    if "--md" in sys.argv:
+        print(markdown_table(rows, mesh="single"))
+        print()
+        print(markdown_table(rows, mesh="multi"))
+
+
+if __name__ == "__main__":
+    main()

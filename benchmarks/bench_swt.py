@@ -1,0 +1,18 @@
+"""Paper Fig. 9 / 20: server waiting time swt — too-frequent polling hurts
+per-round progress (clients accumulate fewer local steps)."""
+from repro.configs.base import FedConfig
+from benchmarks.common import emit, emit_curve, run_quafl
+
+
+def main(rounds: int = 60):
+    for swt in (1.0, 5.0, 20.0):
+        fed = FedConfig(n_clients=16, s=4, local_steps=10, lr=0.3, bits=14,
+                        swt=swt)
+        r = run_quafl(fed, rounds, eval_every=rounds // 6)
+        emit(f"swt{swt:g}", r["us_per_round"],
+             f"acc={r['hist'][-1][3]:.3f};loss={r['hist'][-1][2]:.3f}")
+        emit_curve(f"swt{swt:g}", r["hist"])
+
+
+if __name__ == "__main__":
+    main()

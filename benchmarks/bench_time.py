@@ -1,0 +1,71 @@
+"""Paper Fig. 3 / 11–15 / 21–22: convergence vs SIMULATED TIME — QuAFL
+(unweighted + weighted) vs FedAvg vs the sequential baseline, 25% slow
+clients. QuAFL's non-blocking rounds finish in swt+sit while FedAvg waits
+for the slowest sampled client."""
+import jax
+
+from repro.configs.base import FedConfig
+from repro.core import Sequential
+from repro.models.mlp import mlp_loss
+from benchmarks.common import (batch_fn, emit, emit_curve, run_fedavg,
+                               run_quafl, setup)
+
+
+def main(rounds: int = 120):
+    # Paper Fig. 3 setting: CIFAR = fixed random split (IID), 25% slow
+    # clients Exp(1/8); synchronous FedAvg rounds cost ~max-straggler
+    # Gamma(K, λ) while QuAFL rounds cost swt+sit.
+    fed = FedConfig(n_clients=20, s=5, local_steps=10, lr=0.4, bits=14,
+                    swt=10.0, slow_frac=0.25, lam_slow=1.0 / 8)
+    r = run_quafl(fed, rounds, iid=True, eval_every=rounds // 8)
+    emit("time_quafl", r["us_per_round"],
+         f"acc={r['hist'][-1][3]:.3f};simt={r['hist'][-1][1]:.0f}")
+    emit_curve("time_quafl", r["hist"])
+
+    fedw = FedConfig(n_clients=20, s=5, local_steps=10, lr=0.4, bits=14,
+                     swt=10.0, slow_frac=0.25, lam_slow=1.0 / 8,
+                     weighted=True)
+    r = run_quafl(fedw, rounds, iid=True, eval_every=rounds // 8)
+    emit("time_quafl_weighted", r["us_per_round"],
+         f"acc={r['hist'][-1][3]:.3f};simt={r['hist'][-1][1]:.0f}")
+    emit_curve("time_quafl_weighted", r["hist"])
+
+    # FedAvg round ~ max-straggler time: compare at EQUAL simulated time
+    r = run_fedavg(fed, max(rounds // 10, 2), iid=True,
+                   eval_every=max(rounds // 40, 1))
+    emit("time_fedavg", r["us_per_round"],
+         f"acc={r['hist'][-1][3]:.3f};simt={r['hist'][-1][1]:.0f}")
+    emit_curve("time_fedavg", r["hist"])
+
+    # severe-straggler variant: slow clients at Exp(1/32) — the asynchrony
+    # advantage grows with straggler severity
+    feds = FedConfig(n_clients=20, s=5, local_steps=10, lr=0.4, bits=14,
+                     swt=10.0, slow_frac=0.25, lam_slow=1.0 / 32)
+    r = run_quafl(feds, rounds // 2, iid=True, eval_every=rounds // 8)
+    emit("time_quafl_severe", r["us_per_round"],
+         f"acc={r['hist'][-1][3]:.3f};simt={r['hist'][-1][1]:.0f}")
+    emit_curve("time_quafl_severe", r["hist"])
+    r = run_fedavg(feds, 3, iid=True, eval_every=1)
+    emit("time_fedavg_severe", r["us_per_round"],
+         f"acc={r['hist'][-1][3]:.3f};simt={r['hist'][-1][1]:.0f}")
+    emit_curve("time_fedavg_severe", r["hist"])
+
+    part, test, params0 = setup(fed, iid=True)
+    seq = Sequential(fed=fed, loss_fn=mlp_loss, template=params0,
+                     batch_fn=batch_fn)
+    st = seq.init(params0)
+    key = jax.random.PRNGKey(3)
+    hist = []
+    for t in range(rounds * 2):
+        key, sub = jax.random.split(key)
+        st, _ = seq.round(st, part, sub)
+        if (t + 1) % (rounds // 4) == 0:
+            loss, metr = mlp_loss(seq.eval_params(st), test)
+            hist.append((t + 1, float(st.sim_time), float(loss),
+                         float(metr["acc"]), 0.0))
+    emit("time_sequential", 0.0, f"acc={hist[-1][3]:.3f}")
+    emit_curve("time_sequential", hist)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Shared benchmark harness: one function per paper figure/table.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows plus a
+``# curve:`` block with the convergence data the paper's figure plots.
+The classification task is the Gaussian-mixture stand-in for the paper's
+MNIST/FMNIST/CIFAR/CelebA (offline container; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import FedAvg, FedBuff, QuAFL, Sequential
+from repro.data import make_federated_classification
+from repro.data.synthetic import client_batch
+from repro.models.mlp import init_mlp_classifier, mlp_loss
+
+D_IN, N_CLASSES, HIDDEN = 32, 10, 64
+
+
+def setup(fed: FedConfig, seed: int = 0, iid: bool = True):
+    part, test = make_federated_classification(
+        seed, fed.n_clients, samples_per_client=256, d=D_IN,
+        n_classes=N_CLASSES, iid=iid)
+    params0, _ = init_mlp_classifier(jax.random.PRNGKey(seed), D_IN, HIDDEN,
+                                     N_CLASSES)
+    return part, test, params0
+
+
+def batch_fn(data, key):
+    return client_batch(key, data, 32)
+
+
+def run_quafl(fed: FedConfig, rounds: int, seed: int = 0, iid: bool = True,
+              eval_every: int = 10, **kw) -> Dict:
+    part, test, params0 = setup(fed, seed, iid)
+    alg = QuAFL(fed=fed, loss_fn=mlp_loss, template=params0,
+                batch_fn=batch_fn, **kw)
+    st = alg.init(params0)
+    key = jax.random.PRNGKey(seed + 1)
+    hist = []
+    t0 = time.time()
+    for r in range(rounds):
+        key, sub = jax.random.split(key)
+        st, m = alg.round(st, part, sub)
+        if (r + 1) % eval_every == 0:
+            loss, metr = mlp_loss(alg.eval_params(st), test)
+            hist.append((r + 1, float(st.sim_time), float(loss),
+                         float(metr["acc"]), float(st.bits_sent)))
+    wall = time.time() - t0
+    return {"alg": alg, "state": st, "hist": hist,
+            "us_per_round": wall / max(rounds, 1) * 1e6}
+
+
+def run_fedavg(fed: FedConfig, rounds: int, seed: int = 0, iid: bool = True,
+               eval_every: int = 10) -> Dict:
+    part, test, params0 = setup(fed, seed, iid)
+    alg = FedAvg(fed=fed, loss_fn=mlp_loss, template=params0,
+                 batch_fn=batch_fn)
+    st = alg.init(params0)
+    key = jax.random.PRNGKey(seed + 1)
+    hist = []
+    t0 = time.time()
+    for r in range(rounds):
+        key, sub = jax.random.split(key)
+        st, _ = alg.round(st, part, sub)
+        if (r + 1) % eval_every == 0:
+            loss, metr = mlp_loss(alg.eval_params(st), test)
+            hist.append((r + 1, float(st.sim_time), float(loss),
+                         float(metr["acc"]), float(st.bits_sent)))
+    wall = time.time() - t0
+    return {"state": st, "hist": hist,
+            "us_per_round": wall / max(rounds, 1) * 1e6}
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def emit_curve(name: str, hist: List):
+    print(f"# curve:{name} round,sim_time,loss,acc,bits")
+    for row in hist:
+        print("#   " + ",".join(f"{v:.4g}" for v in row))

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+prints ``name,us_per_call,derived`` CSV (+ ``# curve:`` blocks carrying the
+convergence data each paper figure plots).
+"""
+import sys
+import time
+
+from benchmarks import (bench_averaging, bench_bits, bench_bits_accounting,
+                        bench_extensions, bench_fedbuff, bench_kernels,
+                        bench_local_steps, bench_peers, bench_quantizer,
+                        bench_roofline, bench_swt, bench_time)
+
+BENCHES = [
+    ("Fig1_peers", bench_peers.main),
+    ("Fig2_bits", bench_bits.main),
+    ("Fig3_time", bench_time.main),
+    ("Fig4_averaging", bench_averaging.main),
+    ("Fig5_quantizer", bench_quantizer.main),
+    ("Fig6_fedbuff", bench_fedbuff.main),
+    ("Fig7_local_steps", bench_local_steps.main),
+    ("Fig9_swt", bench_swt.main),
+    ("Lemma38_bits", bench_bits_accounting.main),
+    ("ext_scaffold_adaptive", bench_extensions.main),
+    ("kernels", bench_kernels.main),
+    ("roofline", bench_roofline.main),
+]
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        t0 = time.time()
+        print(f"# === {name} ===")
+        try:
+            if fn.__code__.co_argcount and quick:
+                fn(20)
+            else:
+                fn()
+        except Exception as e:  # keep the harness going
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Client heterogeneity demo (paper §2.1 + Fig. 3): QuAFL with fast/slow
+clients, weighted (η_i = H_min/H_i) vs unweighted dampening, and the
+robustness headline — slow clients sometimes contribute ZERO local steps and
+the algorithm still converges.
+
+    PYTHONPATH=src python examples/heterogeneous_clients.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import QuAFL, client_speeds, expected_steps
+from repro.data import make_federated_classification
+from repro.data.synthetic import client_batch
+from repro.models.mlp import init_mlp_classifier, mlp_loss
+
+
+def run(weighted: bool, swt: float, rounds: int = 120):
+    fed = FedConfig(n_clients=20, s=5, local_steps=10, lr=0.3, bits=10,
+                    swt=swt, slow_frac=0.3, lam_slow=1 / 16, weighted=weighted)
+    part, test = make_federated_classification(0, fed.n_clients, d=32,
+                                               n_classes=10, iid=False)
+    params0, _ = init_mlp_classifier(jax.random.PRNGKey(0), 32, 64, 10)
+    alg = QuAFL(fed=fed, loss_fn=mlp_loss, template=params0,
+                batch_fn=lambda d, k: client_batch(k, d, 32))
+    st = alg.init(params0)
+    key = jax.random.PRNGKey(1)
+    zero_frac = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        st, m = alg.round(st, part, sub)
+        zero_frac.append(float(m["h_zero_frac"]))
+    _, metr = mlp_loss(alg.eval_params(st), test)
+    return float(metr["acc"]), float(np.mean(zero_frac)), alg
+
+
+def main():
+    fed = FedConfig(n_clients=20, slow_frac=0.3, lam_slow=1 / 16,
+                    local_steps=10, swt=2.0)
+    lam = client_speeds(fed, 20)
+    H = expected_steps(fed, lam)
+    print("client speeds λ:", np.unique(lam),
+          " expected steps H_i:", np.unique(H.round(2)))
+    for weighted in (False, True):
+        acc, zf, alg = run(weighted, swt=2.0)
+        print(f"weighted={weighted}:  acc={acc:.3f}  "
+              f"zero-progress polls={zf:.1%}  η_i∈[{alg.eta_i.min():.2f},"
+              f"{alg.eta_i.max():.2f}]")
+    print("\n(paper §4: QuAFL tolerates a large fraction of slow clients "
+          "submitting infrequent or even empty updates)")
+
+
+if __name__ == "__main__":
+    main()

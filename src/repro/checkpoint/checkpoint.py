@@ -1,0 +1,73 @@
+"""Checkpointing for flat-dict pytrees (npz payload + JSON manifest).
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json. Restore is
+shape/dtype-checked against the manifest and (optionally) a template tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}::"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}::"))
+    else:
+        out[prefix.rstrip(":")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: Any) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}::") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(**{k: rebuild(getattr(tree, k), f"{prefix}{k}::")
+                                 for k in tree._fields})
+        key = prefix.rstrip(":")
+        arr = data[key]
+        want = manifest["arrays"][key]
+        assert list(arr.shape) == want["shape"], key
+        return jax.numpy.asarray(arr)
+
+    return rebuild(template)

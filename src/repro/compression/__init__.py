@@ -1,0 +1,4 @@
+from repro.compression.lattice import (IdentityQuantizer, LatticeMsg,  # noqa: F401
+                                       LatticeQuantizer, QSGDQuantizer,
+                                       make_quantizer)
+from repro.compression.rotation import rotate, pad_len  # noqa: F401

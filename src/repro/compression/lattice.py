@@ -1,0 +1,147 @@
+"""Position-aware lattice quantizer (Davies et al. [7], Lemma 3.1).
+
+Semantics (paper §2.2): ``Enc(x)`` maps x to b-bit codes; ``Dec(y, Enc(x))``
+recovers Q(x) using any reference y with ``‖x − y‖`` small. Practical
+construction: randomized Hadamard rotation + *modulo* uniform quantization —
+the codes are the stochastically-rounded rotated coordinates mod 2^b, and the
+decoder snaps to the representative nearest its own rotated reference. The
+three Lemma 3.1 properties hold whenever the wrap condition is met:
+
+  1. unbiased decoding   E[Q(x)] = x      (stochastic rounding)
+  2. error bound         ‖Q(x) − x‖ ≤ γ·sqrt(d_pad)        (ℓ∞ ≤ γ)
+  3. bit cost            d·b + O(1) bits; b ~ log(‖x−y‖/γ)
+
+γ is chosen from a *distance hint* the encoder always has locally (the client
+knows ‖Y − X^i‖ = η·η_i·‖h̃‖; the server uses its previous round delta), so
+the error is proportional to the model *distance*, never the model norm —
+this is exactly what makes direct QSGD-style quantization unsound here
+(paper §2.2 'Fully-Quantized Communication').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.rotation import DEFAULT_BLOCK, pad_len, rotate
+
+
+class LatticeMsg(NamedTuple):
+    codes: jnp.ndarray     # (d_pad,) unsigned ints in [0, 2^b)
+    gamma: jnp.ndarray     # () fp32 — transmitted scale (O(1) overhead)
+
+
+@dataclass(frozen=True)
+class LatticeQuantizer:
+    bits: int = 8
+    block: int = DEFAULT_BLOCK
+    safety: float = 8.0    # head-room factor on the wrap window
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+    def code_dtype(self):
+        if self.bits <= 8:
+            return jnp.uint8
+        if self.bits <= 16:
+            return jnp.uint16
+        return jnp.uint32
+
+    # -- γ from the encoder-local distance hint ----------------------------
+    def gamma_for(self, dist_hint: jnp.ndarray, d: int) -> jnp.ndarray:
+        """dist_hint: upper estimate of ‖x − ref‖₂. After rotation the
+        difference coordinates are subgaussian with scale dist/sqrt(d); the
+        wrap window 2^b·γ must exceed twice the max coordinate."""
+        d_pad = pad_len(d, self.block)
+        maxcoord = dist_hint / np.sqrt(d_pad) * (np.sqrt(2 * np.log(2 * d_pad + 1)) + 2.0)
+        gamma = self.safety * 2.0 * maxcoord / self.levels
+        return jnp.maximum(gamma, 1e-12)
+
+    # -- Enc ----------------------------------------------------------------
+    def encode(self, key, x: jnp.ndarray, dist_hint) -> LatticeMsg:
+        """x: flat (d,) fp32. key: shared rotation+rounding key for the
+        interaction (the server's round seed — both ends derive it)."""
+        d = x.shape[0]
+        gamma = self.gamma_for(jnp.asarray(dist_hint, jnp.float32), d)
+        krot, krnd = jax.random.split(key)
+        y = rotate(x, krot, self.block)
+        # fp32 precision floor: the modulo decode needs y/γ (and w/γ) to keep
+        # sub-integer precision, so γ ≥ max|y|·2^-18. When the distance hint
+        # is tiny relative to the model norm the error bound degrades to the
+        # model's own fp32 resolution instead of silently mis-decoding.
+        gamma = jnp.maximum(gamma, jnp.max(jnp.abs(y)) * 2.0 ** -18)
+        u = jax.random.uniform(krnd, y.shape, jnp.float32)
+        q = jnp.floor(y / gamma + u)             # stochastic rounding
+        codes = jnp.mod(q, self.levels).astype(self.code_dtype())
+        return LatticeMsg(codes=codes, gamma=gamma)
+
+    # -- Dec(ref, msg) -------------------------------------------------------
+    def decode(self, key, msg: LatticeMsg, ref: jnp.ndarray) -> jnp.ndarray:
+        """ref: flat (d,) decoding key (paper's y). Returns Q(x) of len d."""
+        d = ref.shape[0]
+        krot, _ = jax.random.split(key)
+        w = rotate(ref, krot, self.block)        # rotated reference
+        codes = msg.codes.astype(jnp.float32)
+        # nearest integer to w/γ congruent to codes (mod 2^b)
+        q = codes + self.levels * jnp.round((w / msg.gamma - codes)
+                                            / self.levels)
+        xr = q * msg.gamma
+        x = rotate(xr, krot, self.block, inverse=True)
+        return x[:d]
+
+    # -- exact bit accounting (Lemma 3.8) ------------------------------------
+    def message_bits(self, d: int) -> int:
+        return pad_len(d, self.block) * self.bits + 32  # + γ scalar
+
+
+@dataclass(frozen=True)
+class QSGDQuantizer:
+    """Standard norm-scaled stochastic quantizer [Alistarh et al., 1]. Not
+    position-aware: error ∝ ‖x‖ (used as the paper's Figure-5 baseline)."""
+    bits: int = 8
+    block: int = DEFAULT_BLOCK  # unused; uniform API
+
+    @property
+    def levels(self) -> int:
+        return (1 << (self.bits - 1)) - 1  # signed levels
+
+    def encode(self, key, x: jnp.ndarray, dist_hint=None):
+        norm = jnp.linalg.norm(x) + 1e-12
+        y = jnp.abs(x) / norm * self.levels
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        q = jnp.floor(y + u) * jnp.sign(x)
+        return LatticeMsg(codes=q.astype(jnp.int32), gamma=norm)
+
+    def decode(self, key, msg: LatticeMsg, ref=None):
+        return msg.codes.astype(jnp.float32) * (msg.gamma / self.levels)
+
+    def message_bits(self, d: int) -> int:
+        return d * self.bits + 32
+
+
+@dataclass(frozen=True)
+class IdentityQuantizer:
+    bits: int = 32
+
+    def encode(self, key, x, dist_hint=None):
+        return LatticeMsg(codes=x, gamma=jnp.float32(1.0))
+
+    def decode(self, key, msg, ref=None):
+        return msg.codes
+
+    def message_bits(self, d: int) -> int:
+        return d * 32
+
+
+def make_quantizer(name: str, bits: int):
+    if name == "lattice":
+        return LatticeQuantizer(bits=bits)
+    if name == "qsgd":
+        return QSGDQuantizer(bits=bits)
+    if name == "none":
+        return IdentityQuantizer()
+    raise ValueError(name)

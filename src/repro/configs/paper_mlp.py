@@ -1,0 +1,25 @@
+"""The paper's own experimental model family (App. A.3): a small MLP used by
+the MNIST experiments. Used by the benchmark harness to reproduce the paper's
+figures on synthetic classification data (the container is offline, so the
+Gaussian-mixture task in repro.data stands in for MNIST/FMNIST/CIFAR/CelebA).
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    # (784, 32, 10) MLP analogue: d_model doubles as the hidden width.
+    return ModelConfig(
+        name="paper-mlp",
+        arch_type="mlp",
+        source="QuAFL paper App. A.3 (MNIST MLP 784-32-10)",
+        n_layers=1, d_model=32, n_heads=1, n_kv_heads=1, head_dim=1,
+        d_ff=32, vocab_size=10,
+        schedule=(LayerSpec(),),
+        param_dtype="float32", dtype="float32",
+        notes="Consumed by repro.core baselines via repro.models.mlp, not the "
+              "transformer stack.",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config()

@@ -1,0 +1,7 @@
+"""The paper's primary contribution: QuAFL (Alg. 1) plus the baselines it is
+compared against (FedAvg, FedBuff, sequential)."""
+from repro.core.quafl import QuAFL, QuaflState, client_speeds, expected_steps  # noqa: F401
+from repro.core.fedavg import FedAvg, FedAvgState  # noqa: F401
+from repro.core.fedbuff import FedBuff  # noqa: F401
+from repro.core.baseline import Sequential  # noqa: F401
+from repro.core.extensions import AdaptiveBits, AdaptiveQuAFL, QuaflScaffold  # noqa: F401

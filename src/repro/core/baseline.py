@@ -1,0 +1,50 @@
+"""Sequential baseline (paper Fig. 3/10): a single (slow) node performing one
+optimization step per round, acting as both client and server."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
+
+
+class BaselineState(NamedTuple):
+    server: jnp.ndarray
+    t: jnp.ndarray
+    sim_time: jnp.ndarray
+
+
+@dataclass(eq=False)
+class Sequential:
+    fed: FedConfig
+    loss_fn: Callable[[Any, Any], Any]
+    template: Any
+    batch_fn: Callable[[Any, jax.Array], Any]
+
+    def init(self, params0):
+        return BaselineState(server=tree_flatten_vector(params0),
+                             t=jnp.zeros((), jnp.int32),
+                             sim_time=jnp.zeros(()))
+
+    @partial(jax.jit, static_argnums=0)
+    def round(self, state, data, key):
+        def f(v, batch):
+            loss, _ = self.loss_fn(tree_unflatten_vector(self.template, v),
+                                   batch)
+            return loss
+        data0 = jax.tree_util.tree_map(lambda a: a[0], data)
+        k_b, k_t = jax.random.split(key)
+        g = jax.grad(f)(state.server, self.batch_fn(data0, k_b))
+        # a single SLOW node: Exp(λ_slow) step duration
+        dt = jax.random.exponential(k_t) / self.fed.lam_slow
+        return BaselineState(server=state.server - self.fed.lr * g,
+                             t=state.t + 1,
+                             sim_time=state.sim_time + dt), {}
+
+    def eval_params(self, state):
+        return tree_unflatten_vector(self.template, state.server)

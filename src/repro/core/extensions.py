@@ -1,0 +1,189 @@
+"""Beyond-paper extensions the paper's §5 names as future work.
+
+1. **QuAFL-SCAFFOLD** — controlled averaging [Karimireddy et al., 15] on top
+   of Alg. 1: every client keeps a control variate c_i and the server keeps
+   c; local steps use g̃ − c_i + c, and the sampled clients' control updates
+   ride the SAME quantized exchange (the lattice quantizer is position-aware
+   w.r.t. the previous control estimate, so the extra message costs the same
+   b bits/coordinate). Reduces client drift under non-iid data — exactly the
+   G² term that dominates QuAFL's heterogeneous bound.
+
+2. **Adaptive bit-width** (cf. AdaQuantFL [Jhunjhunwala et al., 12], which
+   the paper cites as iid-only): the server tracks the measured relative
+   quantization error of decoded client messages and walks b up/down between
+   rounds to keep it inside a target band. Works with the lattice quantizer
+   because γ already adapts to the model distance — bits only control the
+   wrap-window safety margin.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.lattice import make_quantizer
+from repro.configs.base import FedConfig
+from repro.core.quafl import QuAFL, QuaflState
+
+
+class ScaffoldState(NamedTuple):
+    base: QuaflState
+    c_server: jnp.ndarray      # server control variate (d,)
+    c_clients: jnp.ndarray     # per-client control variates (n, d)
+
+
+@dataclass(eq=False)
+class QuaflScaffold(QuAFL):
+    """QuAFL with SCAFFOLD control variates (option-II updates)."""
+
+    def init(self, params0) -> ScaffoldState:
+        base = super().init(params0)
+        n = self.fed.n_clients
+        z = jnp.zeros_like(base.server)
+        return ScaffoldState(base=base, c_server=z,
+                             c_clients=jnp.zeros((n, z.shape[0])))
+
+    def _local_progress_controlled(self, flat, data_i, h_steps, key, c_corr):
+        K, eta = self.fed.local_steps, self.fed.lr
+
+        def step(carry, q):
+            x, h = carry
+            g = self._grad(x, self.batch_fn(data_i,
+                                            jax.random.fold_in(key, q)))
+            g = g - c_corr            # SCAFFOLD correction: -c_i + c
+            act = (q < h_steps).astype(jnp.float32)
+            return (x - eta * act * g, h + act * g), None
+
+        (_, h), _ = jax.lax.scan(step, (flat, jnp.zeros_like(flat)),
+                                 jnp.arange(K))
+        return h
+
+    @partial(jax.jit, static_argnums=0)
+    def round(self, state: ScaffoldState, data, key):
+        fed = self.fed
+        n, s = fed.n_clients, fed.s
+        base = state.base
+        k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
+        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        elapsed = base.sim_time + fed.swt + fed.sit - base.last_time[idx]
+        lam = jnp.asarray(self.lam)[idx]
+        h_steps = jnp.minimum(jax.random.poisson(k_h, lam * elapsed),
+                              fed.local_steps).astype(jnp.int32)
+
+        cl = base.clients[idx]
+        c_i = state.c_clients[idx]
+        c_corr = c_i - state.c_server[None, :]
+        data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
+        keys = jax.random.split(k_loc, s)
+        h_tilde = jax.vmap(self._local_progress_controlled)(
+            cl, data_s, h_steps, keys, c_corr)
+        eta_i = jnp.asarray(self.eta_i)[idx][:, None]
+        Y = cl - fed.lr * eta_i * h_tilde
+
+        # control update (option II): c_i+ = c_i − c + h̃/H_i
+        steps = jnp.maximum(h_steps.astype(jnp.float32), 1.0)[:, None]
+        c_new = c_i - state.c_server[None, :] + h_tilde / steps
+
+        # quantized exchange — model messages vs X_t, control messages vs
+        # the PREVIOUS client control (position-aware both ways)
+        kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
+        prog = jnp.linalg.norm(fed.lr * eta_i * h_tilde, axis=1)
+
+        def updn(y, cn, ci, kk, hint):
+            m1 = self.quant.encode(kk, y, hint + 1e-8)
+            qy = self.quant.decode(kk, m1, base.server)
+            kk2 = jax.random.fold_in(kk, 17)
+            m2 = self.quant.encode(kk2, cn,
+                                   jnp.linalg.norm(cn - ci) + 1e-8)
+            qc = self.quant.decode(kk2, m2, ci)
+            return qy, qc
+
+        QY, QC = jax.vmap(updn)(Y, c_new, c_i, kq_cl,
+                                prog + base.srv_dist_est)
+
+        server_new = (base.server + jnp.sum(QY, 0)) / (s + 1)
+        c_server_new = state.c_server + jnp.sum(QC - c_i, 0) / n
+
+        kq_srv = jax.random.fold_in(k_q, 0)
+        hint_srv = jnp.max(jnp.linalg.norm(QY - base.server[None], axis=1)) \
+            + 1e-8
+        msg = self.quant.encode(kq_srv, base.server, hint_srv)
+        QX = jax.vmap(lambda r: self.quant.decode(kq_srv, msg, r))(cl)
+        cl_new = QX / (s + 1) + s * Y / (s + 1)
+
+        new_time = base.sim_time + fed.swt + fed.sit
+        nbase = QuaflState(
+            server=server_new, clients=base.clients.at[idx].set(cl_new),
+            t=base.t + 1, sim_time=new_time,
+            last_time=base.last_time.at[idx].set(new_time),
+            bits_sent=base.bits_sent
+            + 2 * (s + 1) * self.quant.message_bits(self.d),
+            srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv)
+        new_state = ScaffoldState(
+            base=nbase, c_server=c_server_new,
+            c_clients=state.c_clients.at[idx].set(QC))
+        metrics = {"h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
+                   "c_norm": jnp.linalg.norm(c_server_new)}
+        return new_state, metrics
+
+    def eval_params(self, state: ScaffoldState):
+        return super().eval_params(state.base)
+
+
+# ---------------------------------------------------------------------------
+# adaptive bit-width controller
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AdaptiveBits:
+    """Walks the bit-width to keep the measured relative quantization error
+    inside [lo, hi]. Bits are part of the round's shared parametrization
+    (server announces b with the poll), so adapting them is free."""
+    bits: int = 8
+    lo: float = 0.01
+    hi: float = 0.05
+    b_min: int = 4
+    b_max: int = 16
+
+    def update(self, rel_err: float) -> int:
+        if rel_err > self.hi and self.bits < self.b_max:
+            self.bits += 1
+        elif rel_err < self.lo and self.bits > self.b_min:
+            self.bits -= 1
+        return self.bits
+
+
+class AdaptiveQuAFL:
+    """Composition wrapper: a QuAFL instance per active bit-width (jit cache
+    friendly — at most b_max − b_min compilations)."""
+
+    def __init__(self, fed: FedConfig, make_alg, params0):
+        self.fed = fed
+        self.make_alg = make_alg
+        self.ctrl = AdaptiveBits(bits=fed.bits)
+        self._algs = {}
+        self.params0 = params0
+        self.state = self._alg(fed.bits).init(params0)
+        self.bits_trace = []
+
+    def _alg(self, bits: int):
+        if bits not in self._algs:
+            import dataclasses
+            self._algs[bits] = self.make_alg(
+                dataclasses.replace(self.fed, bits=bits))
+        return self._algs[bits]
+
+    def round(self, data, key):
+        alg = self._alg(self.ctrl.bits)
+        self.state, m = alg.round(self.state, data, key)
+        rel = float(m["quant_err"]) if "quant_err" in m else 0.02
+        self.bits_trace.append(self.ctrl.bits)
+        self.ctrl.update(rel)
+        return m
+
+    def eval_params(self):
+        return self._alg(self.ctrl.bits).eval_params(self.state)

@@ -1,0 +1,87 @@
+"""Synchronous FedAvg baseline (paper App. A.2 'FedAvg' specification).
+
+Each round the server sends its (uncompressed) model to s random clients;
+each performs EXACTLY K local steps and returns the result; the server
+averages. The server must wait for the SLOWEST sampled client: simulated
+round time = max_i Gamma(K, λ_i) + sit (swt = 0 in FedAvg).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.quafl import client_speeds
+from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
+
+
+class FedAvgState(NamedTuple):
+    server: jnp.ndarray
+    t: jnp.ndarray
+    sim_time: jnp.ndarray
+    bits_sent: jnp.ndarray
+
+
+@dataclass(eq=False)
+class FedAvg:
+    fed: FedConfig
+    loss_fn: Callable[[Any, Any], Any]
+    template: Any
+    batch_fn: Callable[[Any, jax.Array], Any]
+    uniform_speeds: bool = False
+
+    def __post_init__(self):
+        n = self.fed.n_clients
+        self.lam = (np.full(n, self.fed.lam_fast, np.float32)
+                    if self.uniform_speeds else client_speeds(self.fed, n))
+        self.d = int(sum(np.prod(x.shape) for x in
+                         jax.tree_util.tree_leaves(self.template)))
+
+    def init(self, params0) -> FedAvgState:
+        return FedAvgState(server=tree_flatten_vector(params0),
+                           t=jnp.zeros((), jnp.int32),
+                           sim_time=jnp.zeros(()), bits_sent=jnp.zeros(()))
+
+    def _grad(self, flat, batch):
+        def f(v):
+            loss, _ = self.loss_fn(tree_unflatten_vector(self.template, v),
+                                   batch)
+            return loss
+        return jax.grad(f)(flat)
+
+    @partial(jax.jit, static_argnums=0)
+    def round(self, state: FedAvgState, data, key):
+        fed = self.fed
+        n, s, K = fed.n_clients, fed.s, fed.local_steps
+        k_sel, k_loc, k_t = jax.random.split(key, 3)
+        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
+        keys = jax.random.split(k_loc, s)
+
+        def local(data_i, kk):
+            def step(x, q):
+                g = self._grad(x, self.batch_fn(data_i,
+                                                jax.random.fold_in(kk, q)))
+                return x - fed.lr * g, None
+            x, _ = jax.lax.scan(step, state.server, jnp.arange(K))
+            return x
+
+        models = jax.vmap(local)(data_s, keys)
+        server_new = jnp.mean(models, 0)
+        # slowest sampled client: sum of K Exp(λ) step times
+        lam = jnp.asarray(self.lam)[idx]
+        steps = jax.random.gamma(k_t, K * jnp.ones((s,))) / lam
+        dt = jnp.max(steps) + fed.sit
+        bits = (2 * s) * self.d * 32  # uncompressed both ways
+        return FedAvgState(server=server_new, t=state.t + 1,
+                           sim_time=state.sim_time + dt,
+                           bits_sent=state.bits_sent + bits), {
+            "round_time": dt, "bits": jnp.asarray(bits, jnp.float32)}
+
+    def eval_params(self, state):
+        return tree_unflatten_vector(self.template, state.server)

@@ -1,0 +1,196 @@
+"""QuAFL — paper Algorithm 1, as a jit-able JAX round function.
+
+The optimization state is kept as FLAT fp32 vectors (the paper's model is
+x ∈ R^d): ``server`` (X_t) and ``clients`` (X^i, stacked (n, d)). The loss is
+evaluated by unflattening against a template pytree, so any model (the MLP
+family from the paper's experiments or a transformer from the assigned zoo)
+plugs in through ``loss_fn(params_pytree, batch)``.
+
+Faithfulness notes:
+ * Per App. B.1, local steps of unsampled clients have no observable effect,
+   so they are computed lazily at poll time: on contact, client i draws
+   H_i^t = min(K, Poisson(λ_i · elapsed_i)) — the number of Exp(λ_i)-duration
+   steps it would have completed since its last interaction — and replays
+   exactly that many SGD steps (masked lax.scan). H may be 0: the client is
+   polled mid-flight with no progress, and still participates (paper §2.2).
+ * η_i = H_min/H_i dampening uses the EXPECTED speeds (weighted variant);
+   the unweighted variant (paper App. A experiments) sets η_i = 1.
+ * Both directions are quantized with the position-aware lattice quantizer.
+   The server's Enc(X_t) is decoded by each sampled client against its own
+   X^i; the clients' Enc(Y^i) are decoded by the server against X_t
+   (pseudocode lines 4–7).
+ * Averaging: X_{t+1} = (X_t + Σ Q(Y^i)) / (s+1);
+   X^i ← Q(X_t)/(s+1) + s·Y^i/(s+1) — preserves the model mean μ_t up to
+   gradient and quantization noise (the paper's potential argument).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.lattice import make_quantizer
+from repro.configs.base import FedConfig
+from repro.utils.tree import (tree_flatten_vector, tree_unflatten_vector)
+
+
+class QuaflState(NamedTuple):
+    server: jnp.ndarray        # X_t  (d,)
+    clients: jnp.ndarray       # X^i  (n, d)
+    t: jnp.ndarray             # server round
+    sim_time: jnp.ndarray      # simulated wall-clock
+    last_time: jnp.ndarray     # (n,) last interaction time per client
+    bits_sent: jnp.ndarray     # cumulative communication bits
+    srv_dist_est: jnp.ndarray  # running ‖X_t − X^i‖ estimate (server Enc hint)
+
+
+def client_speeds(fed: FedConfig, n: int) -> np.ndarray:
+    """λ per client: first ``slow_frac``·n clients are slow (paper App. A:
+    step time ~ Exp(λ), λ=1/2 fast, λ=1/8 slow, 30% slow)."""
+    lam = np.full(n, fed.lam_fast, dtype=np.float32)
+    n_slow = int(round(fed.slow_frac * n))
+    lam[:n_slow] = fed.lam_slow
+    return lam
+
+
+def expected_steps(fed: FedConfig, lam: np.ndarray) -> np.ndarray:
+    """H_i = E[steps between interactions], capped at K. Between interactions
+    a client has ≈ n/s · (swt+sit) time in expectation."""
+    elapsed = (fed.swt + fed.sit) * max(fed.n_clients / fed.s, 1.0)
+    return np.minimum(fed.local_steps, np.maximum(lam * elapsed, 1e-3))
+
+
+@dataclass(eq=False)
+class QuAFL:
+    fed: FedConfig
+    loss_fn: Callable[[Any, Any], Any]     # (params_pytree, batch) -> (loss, m)
+    template: Any                          # params pytree template
+    batch_fn: Callable[[Any, jax.Array], Any]  # (client_data, key) -> batch
+    avg_mode: str = "both"                 # 'both'|'server_only'|'client_only'
+    uniform_speeds: bool = False
+
+    def __post_init__(self):
+        self.quant = make_quantizer(self.fed.quantizer, self.fed.bits)
+        n = self.fed.n_clients
+        self.lam = (np.full(n, self.fed.lam_fast, np.float32)
+                    if self.uniform_speeds else client_speeds(self.fed, n))
+        self.H = expected_steps(self.fed, self.lam)
+        self.eta_i = ((self.H.min() / self.H) if self.fed.weighted
+                      else np.ones(n)).astype(np.float32)
+        self.d = int(sum(np.prod(x.shape) for x in
+                         jax.tree_util.tree_leaves(self.template)))
+
+    # ------------------------------------------------------------------
+    def init(self, params0) -> QuaflState:
+        x0 = tree_flatten_vector(params0)
+        n = self.fed.n_clients
+        return QuaflState(
+            server=x0, clients=jnp.tile(x0[None], (n, 1)),
+            t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
+            last_time=jnp.zeros((n,)), bits_sent=jnp.zeros(()),
+            srv_dist_est=jnp.ones(()) * 1e-3)
+
+    # ------------------------------------------------------------------
+    def _grad(self, flat, batch):
+        def f(v):
+            loss, _ = self.loss_fn(tree_unflatten_vector(self.template, v),
+                                   batch)
+            return loss
+        return jax.grad(f)(flat)
+
+    def _local_progress(self, flat, data_i, h_steps, key):
+        """Replay up to K masked SGD steps; returns h̃ (sum of step grads)."""
+        K, eta = self.fed.local_steps, self.fed.lr
+
+        def step(carry, q):
+            x, h = carry
+            g = self._grad(x, self.batch_fn(data_i, jax.random.fold_in(key, q)))
+            act = (q < h_steps).astype(jnp.float32)
+            return (x - eta * act * g, h + act * g), None
+
+        (_, h), _ = jax.lax.scan(step, (flat, jnp.zeros_like(flat)),
+                                 jnp.arange(K))
+        return h
+
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnums=0)
+    def round(self, state: QuaflState, data, key):
+        """One server round. data: stacked per-client datasets (n, ...)."""
+        fed = self.fed
+        n, s = fed.n_clients, fed.s
+        k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
+
+        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        elapsed = state.sim_time + fed.swt + fed.sit - state.last_time[idx]
+        lam = jnp.asarray(self.lam)[idx]
+        h_steps = jnp.minimum(jax.random.poisson(k_h, lam * elapsed),
+                              fed.local_steps).astype(jnp.int32)
+
+        cl = state.clients[idx]                                  # (s, d)
+        data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
+        keys = jax.random.split(k_loc, s)
+        h_tilde = jax.vmap(self._local_progress)(cl, data_s, h_steps, keys)
+        eta_i = jnp.asarray(self.eta_i)[idx][:, None]
+        Y = cl - fed.lr * eta_i * h_tilde                        # (s, d)
+
+        # --- quantized exchange (shared per-interaction keys) -----------
+        kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
+        prog_norm = jnp.linalg.norm(fed.lr * eta_i * h_tilde, axis=1)
+
+        def enc_dec_up(y, kk, hint):
+            msg = self.quant.encode(kk, y, hint + 1e-8)
+            return self.quant.decode(kk, msg, state.server)
+
+        QY = jax.vmap(enc_dec_up)(Y, kq_cl,
+                                  prog_norm + state.srv_dist_est)  # (s, d)
+
+        # server -> clients: ONE encode, per-client decode vs own X^i
+        kq_srv = jax.random.fold_in(k_q, 0)
+        hint_srv = (jnp.max(jnp.linalg.norm(QY - state.server[None], axis=1))
+                    + 1e-8)
+        msg_srv = self.quant.encode(kq_srv, state.server, hint_srv)
+        QX = jax.vmap(lambda ref: self.quant.decode(kq_srv, msg_srv, ref))(cl)
+
+        # --- averaging ----------------------------------------------------
+        if self.avg_mode == "both":
+            server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
+            cl_new = QX / (s + 1) + s * Y / (s + 1)
+        elif self.avg_mode == "server_only":
+            server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
+            cl_new = QX
+        elif self.avg_mode == "client_only":
+            server_new = jnp.mean(QY, 0)
+            cl_new = QX / (s + 1) + s * Y / (s + 1)
+        else:  # 'none' — plain replacement both sides
+            server_new = jnp.mean(QY, 0)
+            cl_new = QX
+        clients_new = state.clients.at[idx].set(cl_new)
+
+        bits = (s + 1) * self.quant.message_bits(self.d)
+        new_time = state.sim_time + fed.swt + fed.sit
+        state = QuaflState(
+            server=server_new, clients=clients_new, t=state.t + 1,
+            sim_time=new_time,
+            last_time=state.last_time.at[idx].set(new_time),
+            bits_sent=state.bits_sent + bits,
+            srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv)
+        metrics = {
+            "h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
+            "h_zero_frac": jnp.mean((h_steps == 0).astype(jnp.float32)),
+            "quant_err": jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
+                                  / (jnp.linalg.norm(Y, axis=1) + 1e-9)),
+            "bits": jnp.asarray(bits, jnp.float32),
+        }
+        return state, metrics
+
+    # ------------------------------------------------------------------
+    def eval_params(self, state: QuaflState):
+        return tree_unflatten_vector(self.template, state.server)
+
+    def mean_model(self, state: QuaflState):
+        mu = (state.server + jnp.sum(state.clients, 0)) / (self.fed.n_clients + 1)
+        return tree_unflatten_vector(self.template, mu)

@@ -1,0 +1,56 @@
+"""Leaf-wise quantized transport for the DISTRIBUTED QuAFL train step.
+
+The simulation core (repro.core.quafl) works on one flat vector; on a mesh
+we quantize per parameter leaf instead (each leaf flattens to its own vector,
+rotation blocks never cross leaves). Algebraically this is still a valid
+instance of the blockwise lattice quantizer — the rotation is block-diagonal
+either way — and it keeps every encode/decode local to the shards that own
+the leaf.
+
+Two aggregation transports (see DESIGN.md §3):
+  * dequant_psum   — decode locally, all-reduce fp32 partials (faithful
+                     reading of Alg. 1 line 8 on a pod).
+  * code_allgather — replicate the packed integer codes (uint8/16) across the
+                     client axis, decode all messages locally, sum locally.
+                     Moves b-bit codes over the interconnect instead of fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.lattice import LatticeMsg
+from repro.utils.tree import fold_in_str
+
+
+def leaf_dist(a: Dict[str, Any], b: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    """Per-leaf L2 distance between two flat-dict trees."""
+    return {k: jnp.linalg.norm((a[k] - b[k]).astype(jnp.float32).ravel())
+            for k in a}
+
+
+def tree_encode(quant, key, tree: Dict[str, Any],
+                hints: Dict[str, jnp.ndarray]) -> Dict[str, LatticeMsg]:
+    out = {}
+    for k, v in tree.items():
+        out[k] = quant.encode(fold_in_str(key, k),
+                              v.astype(jnp.float32).ravel(), hints[k] + 1e-12)
+    return out
+
+
+def tree_decode(quant, key, msgs: Dict[str, LatticeMsg],
+                ref: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for k, m in msgs.items():
+        flat = quant.decode(fold_in_str(key, k), m,
+                            ref[k].astype(jnp.float32).ravel())
+        out[k] = flat.reshape(ref[k].shape).astype(ref[k].dtype)
+    return out
+
+
+def tree_bits(quant, tree: Dict[str, Any]) -> int:
+    import numpy as np
+    return int(sum(quant.message_bits(int(np.prod(v.shape)))
+                   for v in tree.values()))

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (gaussian_mixture, lm_token_stream,  # noqa: F401
+                                  make_federated_classification,
+                                  make_federated_tokens, partition_iid,
+                                  partition_by_class)

@@ -1,0 +1,110 @@
+"""Synthetic federated data pipeline.
+
+The container is offline, so MNIST/FMNIST/CIFAR/CelebA are replaced by a
+Gaussian-mixture classification task with the same *federation structure* as
+the paper's LEAF setup: a fixed random split (i.i.d. experiments) or a
+by-class split where each client holds a non-overlapping subset of classes
+(the paper's 'pure non-i.i.d.' CelebA setting).
+
+For the LM architectures we generate per-client token streams from
+client-specific Zipf distributions over the vocabulary (a controllable
+non-iid knob: each client permutes the vocab differently).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# classification task (paper figures)
+# ---------------------------------------------------------------------------
+
+def gaussian_mixture(key, n_samples: int, d: int = 32, n_classes: int = 10,
+                     sep: float = 3.0) -> Dict[str, jnp.ndarray]:
+    kmu, kx, ky = jax.random.split(key, 3)
+    mus = jax.random.normal(kmu, (n_classes, d)) * sep / np.sqrt(d)
+    y = jax.random.randint(ky, (n_samples,), 0, n_classes)
+    x = mus[y] + jax.random.normal(kx, (n_samples, d))
+    return {"x": x, "y": y}
+
+
+def partition_iid(key, data: Dict[str, jnp.ndarray], n_clients: int):
+    """Fixed random split — each client gets a 1/n partition (paper §4)."""
+    n = data["y"].shape[0]
+    m = n // n_clients
+    perm = jax.random.permutation(key, n)[: m * n_clients]
+    idx = perm.reshape(n_clients, m)
+    return {k: v[idx] for k, v in data.items()}  # leaves: (n_clients, m, ...)
+
+
+def partition_by_class(key, data: Dict[str, jnp.ndarray], n_clients: int,
+                       n_classes: int):
+    """Pure non-i.i.d.: samples split across classes so each client receives
+    a non-overlapping subset of classes (paper's CelebA setting)."""
+    y = np.asarray(data["y"])
+    order = np.argsort(y, kind="stable")
+    n = len(order)
+    m = n // n_clients
+    idx = np.stack([order[i * m:(i + 1) * m] for i in range(n_clients)])
+    # deterministic client shuffle so class blocks map to clients randomly
+    perm = np.asarray(jax.random.permutation(key, n_clients))
+    idx = idx[perm]
+    return {k: v[jnp.asarray(idx)] for k, v in data.items()}
+
+
+def make_federated_classification(seed: int, n_clients: int,
+                                  samples_per_client: int = 256, d: int = 32,
+                                  n_classes: int = 10, iid: bool = True,
+                                  test_samples: int = 1024):
+    key = jax.random.PRNGKey(seed)
+    ktr, kte, kp = jax.random.split(key, 3)
+    train = gaussian_mixture(ktr, n_clients * samples_per_client, d, n_classes)
+    # validation drawn from the SAME mixture (class means shared)
+    kmu, kx, ky = jax.random.split(ktr, 3)  # reuse means: regenerate directly
+    test = gaussian_mixture(ktr, test_samples, d, n_classes)
+    part = (partition_iid(kp, train, n_clients) if iid
+            else partition_by_class(kp, train, n_clients, n_classes))
+    return part, test
+
+
+def client_batch(key, client_data, batch: int):
+    """Sample a minibatch from one client's partition {'x': (m,d), 'y': (m,)}."""
+    m = client_data["y"].shape[0]
+    idx = jax.random.randint(key, (batch,), 0, m)
+    return {k: v[idx] for k, v in client_data.items()}
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def lm_token_stream(key, batch: int, seq_len: int, vocab: int,
+                    client_id=0, zipf_a: float = 1.2) -> jnp.ndarray:
+    """Zipf-ish token sampling with a per-client vocab permutation (non-iid).
+
+    Pure-JAX (usable inside jit): inverse-CDF sampling of p(r) ∝ (r+1)^-a,
+    then a client-specific pseudo-permutation token' = (token * prime_c +
+    client_id) mod vocab.
+    """
+    ranks = jnp.arange(vocab, dtype=jnp.float32)
+    w = (ranks + 1.0) ** (-zipf_a)
+    cdf = jnp.cumsum(w) / jnp.sum(w)
+    u = jax.random.uniform(key, (batch, seq_len))
+    tok = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    prime = 1_000_003 % vocab
+    tok = jnp.mod(tok * (prime + 2 * client_id + 1) + client_id * 7919, vocab)
+    return tok
+
+
+def make_federated_tokens(seed: int, n_clients: int, batch: int,
+                          seq_len: int, vocab: int, noniid: bool = True):
+    """(n_clients, batch, seq_len) int32 token batches (one round's data)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    outs = [lm_token_stream(keys[i], batch, seq_len, vocab,
+                            client_id=(i if noniid else 0))
+            for i in range(n_clients)]
+    return jnp.stack(outs)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, print memory/cost analysis, and dump the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single --out experiments/dryrun
+
+The FIRST TWO LINES of this file set XLA_FLAGS before any jax import so
+jax.make_mesh can build the 512-chip production mesh from host devices.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import FedConfig
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_cache, input_specs
+from repro.launch.steps import (abstract_train_state, build_prefill_step,
+                                build_serve_step, build_train_step,
+                                fed_mode_for, n_slots_for)
+
+
+def shape_skip_reason(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.long_500k_ok:
+        return cfg.long_500k_note or "long_500k skipped for this arch"
+    return ""
+
+
+def lower_pair(arch: str, shape_name: str, mesh, fed: FedConfig,
+               transport: str = "dequant_psum", quantized: bool = True,
+               fed_mode: str = None, donate: bool = True,
+               moe_impl: str = "", mamba_chunk: int = 0):
+    """Lower + compile one (arch × shape × mesh). Returns result dict."""
+    cfg = get_config(arch)
+    if moe_impl and cfg.moe is not None:
+        import dataclasses
+        from repro.models.moe import set_moe_mesh
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, impl=moe_impl))
+        set_moe_mesh(mesh)
+    if mamba_chunk and cfg.mamba is not None:
+        import dataclasses
+        cfg = cfg.replace(mamba=dataclasses.replace(cfg.mamba,
+                                                    chunk=mamba_chunk))
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k":
+        cfg = cfg.with_long_variant()
+    reason = shape_skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    fed_mode = fed_mode or fed_mode_for(arch)
+    n_slots = n_slots_for(mesh, fed_mode)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step, state_spec, (st_sh, b_sh, k_sh) = build_train_step(
+                cfg, fed, mesh, shape, fed_mode=fed_mode, transport=transport,
+                quantized=quantized)
+            batch = input_specs(cfg, shape, n_slots=n_slots,
+                                local_steps=fed.local_steps)
+            key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            fn = jax.jit(step, in_shardings=(st_sh, b_sh, k_sh),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_spec, batch, key)
+        elif shape.kind == "prefill":
+            step, p_spec, (p_sh, b_sh) = build_prefill_step(cfg, mesh, shape)
+            batch = input_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(p_spec, batch)
+        else:
+            step, p_spec, c_spec, (p_sh, c_sh, t_sh, pos_sh) = \
+                build_serve_step(cfg, mesh, shape)
+            ins = input_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(p_spec, c_spec, ins["token"], ins["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from repro.launch.hlocost import analyze_hlo
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    hlo = compiled.as_text()
+    walk = analyze_hlo(hlo)           # trip-count-aware (see hlocost.py)
+    coll = walk["collectives"]
+    flops = float(walk["flops"])
+    bytes_acc = float(walk["bytes"])
+    terms = rf.roofline(flops, bytes_acc, coll)
+    mf = rf.model_flops(cfg, shape, fed.local_steps, n_slots)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "n_devices": n_dev,
+        "fed_mode": fed_mode if shape.kind == "train" else "-",
+        "transport": transport if shape.kind == "train" else "-",
+        "quantized": quantized if shape.kind == "train" else "-",
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": coll, "memory": mem_d,
+        "roofline": terms,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / flops if flops else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--transport", default="dequant_psum")
+    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--fed-mode", default=None)
+    ap.add_argument("--moe-impl", default="")
+    ap.add_argument("--bf16-scores", action="store_true")
+    ap.add_argument("--mamba-chunk", type=int, default=0)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.bf16_scores:
+        from repro.models import attention as attn_mod
+        attn_mod.BF16_SCORE_PARTIALS = True
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    fed = FedConfig(bits=args.bits, local_steps=args.local_steps)
+    archs = ([a for a in list_archs() if a != "paper-mlp"]
+             if args.arch == "all" else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}__{shape}__{args.mesh}" + (
+                f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                res = lower_pair(arch, shape, mesh, fed,
+                                 transport=args.transport,
+                                 quantized=not args.no_quant,
+                                 fed_mode=args.fed_mode,
+                                 moe_impl=args.moe_impl,
+                                 mamba_chunk=args.mamba_chunk)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            if "error" in res:
+                print(f"[FAIL] {tag}: {res['error']}", flush=True)
+            elif "skipped" in res:
+                print(f"[SKIP] {tag}: {res['skipped']}", flush=True)
+            else:
+                r = res["roofline"]
+                print(f"[OK]   {tag}: flops/dev={res['flops_per_device']:.3e} "
+                      f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s dom={r['bottleneck']} "
+                      f"(compile {res['compile_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

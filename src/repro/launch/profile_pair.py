@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: print the top memory-traffic / collective contributors
+for one (arch × shape) pair — the §Perf napkin-math tool.
+
+  PYTHONPATH=src python -m repro.launch.profile_pair --arch deepseek-v2-236b \
+      --shape prefill_32k
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import FedConfig
+from repro.launch.dryrun import lower_pair
+from repro.launch.hlocost import top_contributors
+from repro.launch.mesh import make_production_mesh
+from repro.launch import dryrun as dr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--transport", default="dequant_psum")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    fed = FedConfig(local_steps=2)
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if shape.name == "long_500k":
+        cfg = cfg.with_long_variant()
+
+    # rebuild the lowered artifact (same path as dryrun.lower_pair)
+    from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                    build_train_step, fed_mode_for,
+                                    n_slots_for)
+    from repro.launch.specs import input_specs
+    fed_mode = fed_mode_for(args.arch)
+    with mesh:
+        if shape.kind == "train":
+            step, state_spec, (st_sh, b_sh, k_sh) = build_train_step(
+                cfg, fed, mesh, shape, fed_mode=fed_mode,
+                transport=args.transport)
+            batch = input_specs(cfg, shape, n_slots=n_slots_for(mesh, fed_mode),
+                                local_steps=fed.local_steps)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh, k_sh)).lower(
+                state_spec, batch, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        elif shape.kind == "prefill":
+            step, p_spec, (p_sh, b_sh) = build_prefill_step(cfg, mesh, shape)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+                p_spec, input_specs(cfg, shape))
+        else:
+            step, p_spec, c_spec, shs = build_serve_step(cfg, mesh, shape)
+            ins = input_specs(cfg, shape)
+            lowered = jax.jit(step, in_shardings=shs).lower(
+                p_spec, c_spec, ins["token"], ins["pos"])
+        text = lowered.compile().as_text()
+    for r in top_contributors(text, args.top):
+        print(f"{r['bytes']:.3e}B  x{r['mult']:g}  {r['op']:<14s} "
+              f"{r['line'][:130]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms, per (arch × shape × mesh), all in seconds-per-step *per chip*
+(the post-SPMD module is per-partition, so cost_analysis numbers are already
+per device):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = Σ_k bytes_k · ring_factor_k / ICI (~50 GB/s/link; 1 link)
+
+collective bytes are NOT in cost_analysis: we parse the post-optimization
+HLO (``compiled.as_text()``) and sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, with standard
+ring factors (all-reduce counts 2×: reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+# TPU v5e (per brief)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RING_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# e.g.:  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(...)
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """kind -> {'bytes': total result bytes, 'count': n ops}."""
+    out: Dict[str, Dict[str, float]] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:       # async pair: count only the start
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dtype]
+        slot = out.setdefault(kind, {"bytes": 0.0, "count": 0})
+        slot["bytes"] += b
+        slot["count"] += 1
+    return out
+
+
+def collective_seconds(coll: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["bytes"] * RING_FACTOR.get(k, 1.0) / ICI_BW
+               for k, v in coll.items())
+
+
+def roofline(flops: float, bytes_accessed: float,
+             coll: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_accessed / HBM_BW
+    t_x = collective_seconds(coll)
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> float:
+    """Activated parameter count (expert leaves scaled by top_k/E)."""
+    from repro.models.model import abstract_lm
+    spec, axes = abstract_lm(cfg)
+    total = 0.0
+    for k, v in spec.items():
+        n = float(np.prod(v.shape))
+        if axes[k] and "experts" in axes[k] and cfg.moe and "router" not in k:
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return total
+
+
+def tokens_per_step(cfg, shape, local_steps: int, n_slots: int) -> float:
+    from repro.launch.specs import _train_text_len
+    if shape.kind == "train":
+        b_local = max(shape.global_batch // n_slots, 1)
+        return n_slots * local_steps * b_local * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per sequence
+
+
+def model_flops(cfg, shape, local_steps: int, n_slots: int) -> float:
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd = 3x fwd
+    return 2.0 * active_params(cfg) * tokens_per_step(
+        cfg, shape, local_steps, n_slots) * mult

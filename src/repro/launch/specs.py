@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run: weak-type
+correct, shardable, no device allocation) and the cache-axes metadata used
+for sharding the serving state."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import KIND_MAMBA, ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mam
+from repro.models import mla as mla_mod
+from repro.models.model import init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def enc_len_for(shape: ShapeConfig) -> int:
+    return min(4096, max(shape.seq_len // 8, 16))
+
+
+def _train_text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.encdec:
+        return seq_len // 2
+    if cfg.frontend:
+        return seq_len - cfg.n_frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, n_slots: int = 1,
+                local_steps: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for the step function's data arguments."""
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        b_local = max(shape.global_batch // n_slots, 1)
+        t_text = _train_text_len(cfg, shape.seq_len)
+        specs = {"tokens": sds((n_slots, local_steps, b_local, t_text),
+                               jnp.int32)}
+        if cfg.encdec:
+            specs["frontend"] = sds(
+                (n_slots, local_steps, b_local, shape.seq_len // 2,
+                 cfg.d_model), act)
+        elif cfg.frontend:
+            specs["frontend"] = sds(
+                (n_slots, local_steps, b_local, cfg.n_frontend_tokens,
+                 cfg.d_model), act)
+        return specs
+    if shape.kind == "prefill":
+        t_text = _train_text_len(cfg, shape.seq_len)
+        specs = {"tokens": sds((shape.global_batch, t_text), jnp.int32)}
+        if cfg.encdec:
+            specs["frontend"] = sds(
+                (shape.global_batch, shape.seq_len // 2, cfg.d_model), act)
+        elif cfg.frontend:
+            specs["frontend"] = sds(
+                (shape.global_batch, cfg.n_frontend_tokens, cfg.d_model), act)
+        return specs
+    # decode
+    return {"token": sds((shape.global_batch, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# data-argument logical axes (for in_shardings)
+# ---------------------------------------------------------------------------
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    if shape.kind == "train":
+        ax = {"tokens": ("clients", None, "batch_local", None)}
+        if cfg.encdec or cfg.frontend:
+            ax["frontend"] = ("clients", None, "batch_local", None, None)
+        return ax
+    if shape.kind == "prefill":
+        ax = {"tokens": ("batch", None)}
+        if cfg.encdec or cfg.frontend:
+            ax["frontend"] = ("batch", None, None)
+        return ax
+    return {"token": ("batch", None), "pos": ()}
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache spec tree, cache axes tree) for the decode shapes."""
+    enc = enc_len_for(shape) if cfg.encdec else 0
+    cache = init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True,
+                       enc_len=enc)
+    axes = cache_axes(cfg)
+    return cache, axes
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Flat dict of logical axes matching init_cache's paths."""
+    def layer_axes(spec):
+        ax = {}
+        if spec.kind == KIND_MAMBA:
+            for k, v in mam.mamba_cache_axes().items():
+                ax[f"mamba/{k}"] = v
+        elif spec.attn == "mla":
+            for k, v in mla_mod.mla_cache_axes().items():
+                ax[f"mla/{k}"] = v
+        else:
+            for k, v in attn_mod.attn_cache_axes(spec).items():
+                ax[f"attn/{k}"] = v
+        if cfg.encdec:
+            ax["cross/k"] = ("batch", None, None, None)
+            ax["cross/v"] = ("batch", None, None, None)
+        return ax
+
+    out = {}
+    for i, spec in enumerate(cfg.prefix):
+        for k, v in layer_axes(spec).items():
+            out[f"pre/{i}/{k}"] = v
+    for j, spec in enumerate(cfg.schedule):
+        for k, v in layer_axes(spec).items():
+            out[f"body/{j}/{k}"] = ("layers",) + tuple(v)
+    return out

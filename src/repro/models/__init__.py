@@ -1,0 +1,2 @@
+from repro.models.model import (abstract_lm, decode_step, forward, init_cache,
+                                init_lm, lm_loss)  # noqa: F401

@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Prefill/train uses the chunked SSD dual form: quadratic attention-like
+computation inside fixed-size chunks plus a ``lax.scan`` state recurrence
+across chunks (TPU-friendly: the intra-chunk part is MXU matmuls; no
+per-token sequential scan). Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def _dims(cfg):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    nheads = d_inner // m.head_dim
+    conv_dim = d_inner + 2 * m.ngroups * m.d_state
+    return m, d_inner, nheads, conv_dim
+
+
+def init_mamba(ctx, cfg):
+    m, d_inner, nheads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * m.ngroups * m.d_state + nheads
+    ctx.param("in_proj", (d, proj_out), ("embed", "mlp"))
+    ctx.param("conv_w", (m.conv_width, conv_dim), (None, "mlp"), scale=0.5)
+    ctx.param("conv_b", (conv_dim,), ("mlp",), init="zeros")
+    ctx.param("A_log", (nheads,), (None,), init="a_log")
+    ctx.param("D", (nheads,), (None,), init="ones")
+    ctx.param("dt_bias", (nheads,), (None,), init="uniform_dt")
+    ctx.param("norm/scale", (d_inner,), ("mlp",), init="zeros")
+    ctx.param("out_proj", (d_inner, d), ("mlp", "embed"))
+
+
+def _split_proj(cfg, zxbcdt):
+    m, d_inner, nheads, _ = _dims(cfg)
+    gs = m.ngroups * m.d_state
+    z = zxbcdt[..., :d_inner]
+    xs = zxbcdt[..., d_inner:2 * d_inner]
+    B = zxbcdt[..., 2 * d_inner:2 * d_inner + gs]
+    C = zxbcdt[..., 2 * d_inner + gs:2 * d_inner + 2 * gs]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gs:]
+    return z, xs, B, C, dt
+
+
+def _conv_causal(cfg, p, u, pre, conv_state=None):
+    """Depthwise causal conv over (b, t, conv_dim). conv_state: (b, w-1, cd)
+    holds the trailing inputs from the previous segment (decode)."""
+    m = cfg.mamba
+    w = m.conv_width
+    if conv_state is None:
+        up = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    cw = p[f"{pre}conv_w"].astype(u.dtype)
+    out = sum(up[:, i:i + u.shape[1]] * cw[i] for i in range(w))
+    out = jax.nn.silu(out + p[f"{pre}conv_b"].astype(u.dtype))
+    new_state = up[:, -(w - 1):] if w > 1 else up[:, :0]
+    return out, new_state
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int, init_state=None):
+    """SSD dual form.
+
+    xh: (b, t, h, p); dt: (b, t, h) (post-softplus); A: (h,) negative;
+    B, C: (b, t, g, n) with g dividing h. Returns (y (b,t,h,p), state).
+    """
+    b, t, h, pdim = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    B = jnp.repeat(B, rep, axis=2)      # (b, t, h, n)
+    C = jnp.repeat(C, rep, axis=2)
+    L = min(chunk, t)
+    pad = (-t) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // L
+    f32 = jnp.float32
+    xh_, dt_, B_, C_ = (a.reshape(b, nc, L, *a.shape[2:]).astype(f32)
+                        for a in (xh, dt, B, C))
+    da = dt_ * A.astype(f32)[None, None, None, :]            # (b,c,l,h)
+    cs = jnp.cumsum(da, axis=2)                              # cumulative decay
+    seg = cs[:, :, -1:, :]                                   # chunk total
+
+    # intra-chunk (quadratic in L): scores[i,j] = C_i.B_j exp(cs_i - cs_j) dt_j
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (b,c,i,j,h)
+    iidx, jidx = jnp.arange(L)[:, None], jnp.arange(L)[None, :]
+    causal = (iidx >= jidx)[None, None, :, :, None]
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", C_, B_)
+    scores = cb * decay * causal * dt_[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xh_)
+
+    # per-chunk terminal state: sum_j exp(seg - cs_j) dt_j B_j x_j
+    sdec = jnp.exp(seg - cs)                                 # (b,c,l,h)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        sdec * dt_, B_, xh_)                 # (b,c,h,p,n)
+
+    # inter-chunk recurrence over c
+    segc = jnp.exp(seg[:, :, 0, :])                          # (b,c,h)
+
+    def step(carry, inp):
+        st, dec, prev = carry, inp["dec"], inp["st"]
+        new = st * dec[:, :, None, None] + prev
+        return new, st                                       # emit state BEFORE chunk
+
+    if init_state is None:
+        init = jnp.zeros((b, h, pdim, n), f32)
+    else:
+        init = init_state.astype(f32)
+    xs = {"dec": jnp.moveaxis(segc, 1, 0), "st": jnp.moveaxis(states, 1, 0)}
+    final_state, prev_states = jax.lax.scan(step, init, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b,c,h,p,n)
+
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                         C_, prev_states, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(b, tt, h, pdim)[:, :t]
+    return y.astype(xh.dtype), final_state
+
+
+def mamba_prefill(cfg, p, x, prefix: str = "", cache=None):
+    """x: (b, t, d) -> (out, new_cache)."""
+    pre = prefix + "/" if prefix else ""
+    m, d_inner, nheads, conv_dim = _dims(cfg)
+    b, t, _ = x.shape
+    zxbcdt = x @ p[f"{pre}in_proj"].astype(x.dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    u = jnp.concatenate([xs, B, C], axis=-1)
+    u, conv_state = _conv_causal(cfg, p, u, pre)
+    xs = u[..., :d_inner]
+    B = u[..., d_inner:d_inner + m.ngroups * m.d_state]
+    C = u[..., d_inner + m.ngroups * m.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[f"{pre}dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p[f"{pre}A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, t, nheads, m.head_dim)
+    Bg = B.reshape(b, t, m.ngroups, m.d_state)
+    Cg = C.reshape(b, t, m.ngroups, m.d_state)
+    init_state = cache["ssm"] if cache is not None else None
+    y, state = _ssd_chunked(xh, dt, A, Bg, Cg, m.chunk, init_state)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) \
+        * p[f"{pre}D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, t, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p[f"{pre}norm/scale"])
+    out = y @ p[f"{pre}out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": state.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, abstract: bool):
+    m, d_inner, nheads, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    shapes = {"conv": ((batch, m.conv_width - 1, conv_dim), dt),
+              "ssm": ((batch, nheads, m.head_dim, m.d_state), jnp.float32)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def mamba_cache_axes():
+    return {"conv": ("batch", None, "mlp"),
+            "ssm": ("batch", None, None, None)}
+
+
+def mamba_decode(cfg, p, x, cache, prefix: str = ""):
+    """Single-token recurrent step. x: (b, 1, d)."""
+    pre = prefix + "/" if prefix else ""
+    m, d_inner, nheads, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = x @ p[f"{pre}in_proj"].astype(x.dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    u = jnp.concatenate([xs, B, C], axis=-1)                 # (b, 1, cd)
+    u, conv_state = _conv_causal(cfg, p, u, pre, cache["conv"])
+    xs = u[..., :d_inner]
+    B = u[..., d_inner:d_inner + m.ngroups * m.d_state]
+    C = u[..., d_inner + m.ngroups * m.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[f"{pre}dt_bias"].astype(jnp.float32))  # (b,1,h)
+    A = -jnp.exp(p[f"{pre}A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, nheads, m.head_dim).astype(jnp.float32)
+    Bg = jnp.repeat(B.reshape(b, m.ngroups, m.d_state),
+                    nheads // m.ngroups, axis=1).astype(jnp.float32)
+    Cg = jnp.repeat(C.reshape(b, m.ngroups, m.d_state),
+                    nheads // m.ngroups, axis=1).astype(jnp.float32)
+    dt1 = dt[:, 0]                                           # (b, h)
+    da = jnp.exp(dt1 * A[None, :])                           # (b, h)
+    state = cache["ssm"].astype(jnp.float32)
+    state = (state * da[:, :, None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh, Bg))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cg) \
+        + xh * p[f"{pre}D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p[f"{pre}norm/scale"])
+    out = y @ p[f"{pre}out_proj"].astype(x.dtype)
+    new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                 "ssm": state.astype(cache["ssm"].dtype)}
+    return out, new_cache

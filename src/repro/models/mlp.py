@@ -1,0 +1,34 @@
+"""The paper's experimental classifier family (App. A.3): MLP for the
+MNIST-style tasks. Used by the FL benchmark harness on the synthetic
+Gaussian-mixture dataset (offline stand-in for MNIST/FMNIST/CIFAR/CelebA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Ctx
+
+
+def init_mlp_classifier(key, d_in: int, d_hidden: int, n_classes: int,
+                        param_dtype: str = "float32"):
+    ctx = Ctx(key, param_dtype)
+    ctx.param("w1", (d_in, d_hidden), ("embed", "mlp"))
+    ctx.param("b1", (d_hidden,), ("mlp",), init="zeros")
+    ctx.param("w2", (d_hidden, n_classes), ("mlp", "vocab"))
+    ctx.param("b2", (n_classes,), ("vocab",), init="zeros")
+    return ctx.params, ctx.axes
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    """batch: {'x': (b, d), 'y': (b,) int}. Returns (loss, metrics)."""
+    logits = mlp_logits(params, batch["x"]).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - tgt)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"acc": acc}

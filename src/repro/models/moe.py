@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer: top-k router + grouped matmul experts.
+
+Two implementations:
+  * 'ragged' — sort tokens by expert and run ``jax.lax.ragged_dot`` grouped
+    matmuls (MegaBlocks-style; FLOPs scale with *active* experts only).
+  * 'dense'  — capacity-based one-hot dispatch/combine einsums (GShard-style
+    fallback; used if ragged_dot will not partition on some topology).
+
+Experts are tensor-parallel on the expert-FFN dimension ('expert_mlp' →
+'model' mesh axis) by default; an expert-parallel variant ('experts' →
+'model', tokens all-to-all) is a §Perf hillclimb option in the launcher.
+Shared experts (DeepSeek/Llama4) are plain dense MLPs added to the output.
+The router aux load-balance loss is returned to the caller and added to each
+client's local objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, init_mlp
+
+
+_MOE_MESH = None  # set by the launcher for the 'ragged_shmap' impl
+
+
+def set_moe_mesh(mesh):
+    """Launcher hook: mesh used by the shard_map MoE implementation."""
+    global _MOE_MESH
+    _MOE_MESH = mesh
+
+
+def init_moe(ctx, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    ctx.param("router", (d, m.n_experts), ("embed", "experts"), scale=0.02)
+    ctx.param("w_gate", (m.n_experts, d, m.d_ff_expert),
+              ("experts", "embed", "expert_mlp"))
+    ctx.param("w_up", (m.n_experts, d, m.d_ff_expert),
+              ("experts", "embed", "expert_mlp"))
+    ctx.param("w_down", (m.n_experts, m.d_ff_expert, d),
+              ("experts", "expert_mlp", "embed"))
+    if m.n_shared:
+        ff = m.d_ff_shared or m.d_ff_expert * m.n_shared
+        init_mlp(ctx.sub("shared"), d, ff)
+
+
+def _router(cfg, p, x, pre):
+    """x: (T, d) -> (weights (T, k), idx (T, k), aux_loss)."""
+    m = cfg.moe
+    logits = (x @ p[f"{pre}router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    density = jnp.mean(probs, axis=0)                       # (E,)
+    one_hot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)       # (E,)
+    aux = m.n_experts * jnp.sum(frac * density) * m.router_aux_coef
+    return weights.astype(x.dtype), idx, aux
+
+
+def _moe_ragged(cfg, p, x, weights, idx, pre):
+    m = cfg.moe
+    T, d = x.shape
+    k = m.top_k
+    flat_idx = idx.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(flat_idx)
+    inv = jnp.argsort(order)
+    xs = jnp.repeat(x, k, axis=0)[order]                     # (T*k, d) sorted
+    group_sizes = jnp.bincount(flat_idx, length=m.n_experts).astype(jnp.int32)
+    h = (jax.nn.silu(jax.lax.ragged_dot(xs, p[f"{pre}w_gate"].astype(x.dtype),
+                                        group_sizes))
+         * jax.lax.ragged_dot(xs, p[f"{pre}w_up"].astype(x.dtype),
+                              group_sizes))
+    y = jax.lax.ragged_dot(h, p[f"{pre}w_down"].astype(x.dtype), group_sizes)
+    y = y[inv].reshape(T, k, d)
+    return jnp.sum(y * weights[..., None], axis=1)
+
+
+def _moe_dense(cfg, p, x, weights, idx, pre):
+    """Capacity-based dispatch/combine (GShard). Exact when capacity covers
+    all routed tokens; tokens over capacity are dropped (standard)."""
+    m = cfg.moe
+    T, d = x.shape
+    cap = max(1, int(m.capacity_factor * T * m.top_k / m.n_experts))
+    one_hot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)  # (T,k,E)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot - 1.0              # slot ids
+    keep = (pos < cap) & (one_hot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkec->tec", one_hot * keep, pos_oh)
+    combine = jnp.einsum("tk,tke,tkec->tec", weights.astype(jnp.float32),
+                         one_hot * keep, pos_oh)
+    xe = jnp.einsum("td,tec->ecd", x.astype(jnp.float32), dispatch)
+    xe = xe.astype(x.dtype)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p[f"{pre}w_gate"]
+                                .astype(x.dtype)))
+         * jnp.einsum("ecd,edf->ecf", xe, p[f"{pre}w_up"].astype(x.dtype)))
+    y = jnp.einsum("ecf,efd->ecd", h, p[f"{pre}w_down"].astype(x.dtype))
+    out = jnp.einsum("ecd,tec->td", y.astype(jnp.float32), combine)
+    return out.astype(x.dtype)
+
+
+def _moe_ragged_shmap(cfg, p, x, weights, idx, pre):
+    """§Perf: the ragged grouped-matmul under shard_map.
+
+    GSPMD has no native partitioning for lax.ragged_dot and falls back to a
+    dense-masked matmul that materializes a (T·k, E·d) operand — 20+ TB per
+    layer for deepseek-v2 at prefill_32k. Under shard_map every device runs
+    the LOCAL ragged_dot on its token shard (full experts, 1/16 of the
+    expert-FFN dim) and the only collective left is the algorithmically
+    required psum of the down-projection partial sums over 'model'."""
+    from jax.sharding import PartitionSpec as P
+    mesh = _MOE_MESH
+    assert mesh is not None, "set_moe_mesh(mesh) before using ragged_shmap"
+    m = cfg.moe
+
+    def local(xl, wl, il, wg, wu, wd):
+        yl = _moe_ragged(cfg, {f"{pre}w_gate": wg, f"{pre}w_up": wu,
+                               f"{pre}w_down": wd}, xl, wl, il, pre)
+        return jax.lax.psum(yl, "model")
+
+    tok_spec = P("data", None) if mesh.shape.get("data", 1) > 1 else P()
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(tok_spec, P("data", None) if tok_spec != P() else P(),
+                  P("data", None) if tok_spec != P() else P(),
+                  P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None)),
+        out_specs=tok_spec, check_vma=False)
+    return fn(x, weights, idx.astype(jnp.int32),
+              p[f"{pre}w_gate"].astype(x.dtype),
+              p[f"{pre}w_up"].astype(x.dtype),
+              p[f"{pre}w_down"].astype(x.dtype))
+
+
+def apply_moe(cfg, p, x, prefix: str = ""):
+    """x: (b, t, d) -> (out, aux_loss)."""
+    pre = prefix + "/" if prefix else ""
+    m = cfg.moe
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    weights, idx, aux = _router(cfg, p, xf, pre)
+    if m.impl == "ragged":
+        out = _moe_ragged(cfg, p, xf, weights, idx, pre)
+    elif m.impl == "ragged_shmap":
+        out = _moe_ragged_shmap(cfg, p, xf, weights, idx, pre)
+    else:
+        out = _moe_dense(cfg, p, xf, weights, idx, pre)
+    if m.n_shared:
+        out = out + apply_mlp(p, xf, prefix=(prefix + "/shared" if prefix
+                                             else "shared"))
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,123 @@
+"""Parameter construction with logical-axis metadata.
+
+Every parameter is created through a ``Ctx`` so that we simultaneously get:
+  * the concrete array (init mode),
+  * a ``jax.ShapeDtypeStruct`` (abstract mode, for dry-runs — no allocation),
+  * a parallel dict of logical-axis tuples used by repro.sharding.rules.
+
+Params are a FLAT dict keyed by '/'-joined paths; scanned layer stacks carry a
+leading 'layers' axis created by ``StackCtx`` so the whole body lowers as one
+``lax.scan`` (keeps the HLO small for the 48–72 layer architectures).
+
+Logical axes used across the model zoo:
+  vocab, embed, q_flat (n_heads*head_dim), kv_flat, mlp, experts, expert_mlp,
+  lora, conv_dim, heads, layers (scan stacking), clients (per-client replica
+  stacking in QuAFL's distributed mode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import fold_in_str
+
+Axes = Tuple[Optional[str], ...]
+
+
+class Ctx:
+    """Records (path -> array/spec) and (path -> logical axes)."""
+
+    def __init__(self, key: Optional[jax.Array], param_dtype: str,
+                 abstract: bool = False):
+        self.key = key
+        self.abstract = abstract
+        self.param_dtype = jnp.dtype(param_dtype)
+        self.params: Dict[str, jax.Array] = {}
+        self.axes: Dict[str, Axes] = {}
+
+    def _make(self, path: str, shape, axes, init, scale):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.param_dtype)
+        k = fold_in_str(self.key, path)
+        if init == "zeros":
+            return jnp.zeros(shape, self.param_dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.param_dtype)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) > 1 else 1
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            x = jax.random.normal(k, tuple(shape), jnp.float32) * scale
+            return x.astype(self.param_dtype)
+        if init == "uniform_dt":  # mamba dt_bias: softplus^-1(U(1e-3, 1e-1))
+            u = jax.random.uniform(k, tuple(shape), jnp.float32,
+                                   minval=1e-3, maxval=1e-1)
+            return jnp.log(jnp.expm1(u)).astype(self.param_dtype)
+        if init == "a_log":  # mamba A in [1, 16]
+            u = jax.random.uniform(k, tuple(shape), jnp.float32,
+                                   minval=1.0, maxval=16.0)
+            return jnp.log(u).astype(self.param_dtype)
+        raise ValueError(init)
+
+    def param(self, path: str, shape: Tuple[int, ...], axes: Axes,
+              init: str = "normal", scale: Optional[float] = None):
+        assert len(shape) == len(axes), (path, shape, axes)
+        assert path not in self.params, f"duplicate param {path}"
+        self.axes[path] = tuple(axes)
+        arr = self._make(path, shape, axes, init, scale)
+        self.params[path] = arr
+        return arr
+
+    def sub(self, prefix: str) -> "SubCtx":
+        return SubCtx(self, prefix, stack=0)
+
+
+class SubCtx:
+    """Prefixes paths; optionally prepends a stacked 'layers' dim of size n."""
+
+    def __init__(self, parent: Ctx, prefix: str, stack: int = 0):
+        self._p = parent
+        self._prefix = prefix
+        self._stack = stack
+
+    @property
+    def abstract(self):
+        return self._p.abstract
+
+    def param(self, path, shape, axes, init="normal", scale=None):
+        full = f"{self._prefix}/{path}" if self._prefix else path
+        if self._stack:
+            shape = (self._stack,) + tuple(shape)
+            axes = ("layers",) + tuple(axes)
+        assert len(shape) == len(axes), (full, shape, axes)
+        assert full not in self._p.params, f"duplicate param {full}"
+        self._p.axes[full] = tuple(axes)
+        arr = self._p._make(full, shape, axes, init, scale)
+        self._p.params[full] = arr
+        return arr
+
+    def sub(self, prefix: str) -> "SubCtx":
+        pre = f"{self._prefix}/{prefix}" if self._prefix else prefix
+        return SubCtx(self._p, pre, stack=self._stack)
+
+    def stacked(self, prefix: str, n: int) -> "SubCtx":
+        pre = f"{self._prefix}/{prefix}" if self._prefix else prefix
+        assert self._stack == 0, "nested stacking unsupported"
+        return SubCtx(self._p, pre, stack=n)
+
+
+# ---------------------------------------------------------------------------
+# flat-dict subtree helpers (params are {path: array})
+# ---------------------------------------------------------------------------
+
+def subtree(params: Dict[str, jax.Array], prefix: str) -> Dict[str, jax.Array]:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def has_subtree(params: Dict[str, jax.Array], prefix: str) -> bool:
+    pre = prefix + "/"
+    return any(k.startswith(pre) for k in params)

@@ -1,0 +1,1 @@
+from repro.optim.optim import adam, sgd, Optimizer  # noqa: F401

@@ -1,0 +1,65 @@
+"""Minimal pure-pytree optimizers (optax is not available offline).
+
+API: opt.init(params) -> state; opt.update(grads, state, params) ->
+(updates, state). Updates are SUBTRACTED: p <- p - lr * update_direction is
+folded into the update (updates already include the lr)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return jax.tree_util.tree_map(jnp.zeros_like, params)
+        return ()
+
+    def update(grads, state, params=None):
+        if momentum:
+            state = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state, grads)
+            upd = jax.tree_util.tree_map(lambda m: lr * m, state)
+        else:
+            upd = jax.tree_util.tree_map(lambda g: lr * g, grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(mu=z, nu=jax.tree_util.tree_map(jnp.copy, z),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m, v: lr * (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return upd, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)

@@ -1,0 +1,101 @@
+"""Batched serving engine over the model zoo's prefill/decode steps.
+
+Static-batch continuous serving: requests queue up, the engine assembles a
+batch (padding prompts to a common length), prefills once, then decodes
+token-by-token with the jitted single-token step until every sequence hits
+its max_new_tokens or emits EOS. Serves the SERVER model of a QuAFL run —
+serving is inference of the federated result (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward, init_cache
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1: never stop early
+    out_tokens: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_seq: int = 256, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.queue: List[Request] = []
+
+        def _decode(params, tok, pos, cache, key):
+            logits, cache = decode_step(cfg, params, tok, pos, cache)
+            lg = logits[:, -1]
+            if temperature > 0:
+                nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lg, axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._decode = jax.jit(_decode)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill(self, prompts: np.ndarray):
+        cache = init_cache(self.cfg, prompts.shape[0], self.max_seq)
+        logits, cache, _ = forward(self.cfg, self.params,
+                                   {"tokens": jnp.asarray(prompts)},
+                                   cache=cache, write_pos=0)
+        return logits[:, -1], cache
+
+    def run(self, key=None) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        done: List[Request] = []
+        while self.queue:
+            batch = self.queue[: self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            plen = max(len(r.prompt) for r in batch)
+            prompts = np.zeros((len(batch), plen), np.int32)
+            for i, r in enumerate(batch):
+                prompts[i, -len(r.prompt):] = r.prompt  # left-pad with 0
+            last_logits, cache = self._prefill(prompts)
+            if self.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, last_logits / self.temperature, axis=-1)
+            else:
+                tok = jnp.argmax(last_logits, axis=-1)
+            tok = tok.astype(jnp.int32)
+            alive = np.ones(len(batch), bool)
+            steps = max(r.max_new_tokens for r in batch)
+            for i, r in enumerate(batch):
+                r.out_tokens.append(int(tok[i]))
+            pos = plen
+            for _ in range(min(steps - 1, self.max_seq - plen - 1)):
+                key, sub = jax.random.split(key)
+                tok, cache = self._decode(self.params, tok[:, None],
+                                          jnp.int32(pos), cache, sub)
+                pos += 1
+                for i, r in enumerate(batch):
+                    if not alive[i]:
+                        continue
+                    t = int(tok[i])
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(t)
+                    if t == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                        alive[i] = False
+                if not alive.any():
+                    break
+            done.extend(batch)
+        return done

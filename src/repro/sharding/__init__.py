@@ -1,0 +1,3 @@
+from repro.sharding.rules import (RULES_TP, RULES_FSDP, RULES_EP,  # noqa: F401
+                                  pspec_for, tree_pspecs, tree_shardings,
+                                  rules_for_mode)

@@ -1,0 +1,96 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+A rule maps a logical axis name to a mesh axis (or a priority list of mesh
+axes). ``pspec_for`` applies rules with a divisibility check — a dimension
+that does not divide evenly by the mesh axis size is left replicated (e.g.
+llama4's 40 q-heads over a 16-way model axis: the *flattened* q_flat=5120
+dim shards instead, which is why projection weights use flattened head dims).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rule = Union[None, str, Sequence[str]]
+
+# Tensor-parallel inside a replica; clients stacked over the data axis.
+RULES_TP: Dict[str, Rule] = {
+    "vocab": "model",
+    "q_flat": "model",
+    "kv_flat": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "experts": None,
+    "lora": None,
+    "embed": None,
+    "layers": None,
+    "clients": "data",
+    # activations / cache
+    "batch": "data",
+    "batch_local": None,   # per-client batch (client replicas own 'data')
+    "kv_seq": "data",      # claimed only when 'data' is still free (batch=1)
+    "kv_heads": "model",   # decode cache: kv heads over model when divisible
+    "head_dim": "model",   # ...else head_dim (128 % 16 == 0 everywhere)
+    "kv_lora": "model",    # MLA compressed cache dim
+    "act_seq": None,
+    "act_model": "model",
+}
+
+# Cohort mode for the giant architectures: one client per pod; parameters are
+# additionally fully-sharded (FSDP) over the data axis on the embed dim.
+RULES_FSDP: Dict[str, Rule] = dict(
+    RULES_TP,
+    embed="data",
+    clients="pod",
+    batch_local="data",    # the cohort's batch spreads over the data axis
+)
+
+# Expert-parallel variant (§Perf hillclimb): experts over the model axis,
+# expert-FFN dim replicated.
+RULES_EP: Dict[str, Rule] = dict(
+    RULES_TP,
+    experts="model",
+    expert_mlp=None,
+)
+
+
+def rules_for_mode(mode: str) -> Dict[str, Rule]:
+    return {"client_dp": RULES_TP, "cohort": RULES_FSDP, "ep": RULES_EP}[mode]
+
+
+def pspec_for(shape, axes, rules: Dict[str, Rule], mesh: Mesh) -> P:
+    """Build a PartitionSpec for one array, honoring divisibility and
+    never assigning the same mesh axis twice."""
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        assign = None
+        cands = rules.get(ax) if ax is not None else None
+        if cands is not None:
+            if isinstance(cands, str):
+                cands = [cands]
+            for cand in cands:
+                if cand in used or cand not in mesh.shape:
+                    continue
+                if dim % mesh.shape[cand] == 0 and dim >= mesh.shape[cand]:
+                    assign = cand
+                    used.add(cand)
+                    break
+        out.append(assign)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(shape_tree, axes_tree, rules, mesh):
+    """shape_tree: dict path->ShapeDtypeStruct; axes_tree: path->axes."""
+    return {k: pspec_for(v.shape, axes_tree[k], rules, mesh)
+            for k, v in shape_tree.items()}
+
+
+def tree_shardings(shape_tree, axes_tree, rules, mesh):
+    return {k: NamedSharding(mesh, s)
+            for k, s in tree_pspecs(shape_tree, axes_tree, rules,
+                                    mesh).items()}

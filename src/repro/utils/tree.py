@@ -1,0 +1,95 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_flatten_vector(tree: Any) -> jnp.ndarray:
+    """Concatenate all leaves into one flat fp32 vector (QuAFL operates on R^d)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def tree_unflatten_vector(tree_like: Any, vec: jnp.ndarray) -> Any:
+    """Inverse of tree_flatten_vector relative to a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(jnp.reshape(vec[off:off + n], leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_map(fn: Callable, *trees: Any) -> Any:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: Any, c) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * c, a)
+
+
+def tree_axpy(alpha, x: Any, y: Any) -> Any:
+    """alpha * x + y, leafwise."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: Any, b: Any):
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    return sum(jax.tree_util.tree_leaves(parts))
+
+
+def tree_norm(a: Any):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_cast(a: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def fold_in_str(key: jax.Array, s: str) -> jax.Array:
+    """Derive a sub-key deterministically from a string path."""
+    return jax.random.fold_in(key, zlib.crc32(s.encode()) & 0x7FFFFFFF)

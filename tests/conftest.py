@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see exactly ONE device — the 512-device flag
+# is set only inside repro.launch.dryrun (and the sharding tests' subprocess).
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,152 @@
+"""Distributed train/serve step correctness (single device + host-device
+mesh subprocess) and sharding-rule unit tests."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.configs.base import FedConfig, ShapeConfig
+from repro.launch.steps import build_train_step, init_train_state
+from repro.sharding.rules import RULES_TP, RULES_FSDP, pspec_for
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def test_pspec_divisibility_fallback():
+    mesh = _mesh11()
+    # trivially divisible by 1
+    assert pspec_for((40, 128), ("q_flat", None), RULES_TP, mesh) == P("model")
+
+    import jax as _j
+    mesh16 = None  # can't build 16x16 on 1 device; emulate via shape dict
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    # 40 heads do NOT divide 16 -> replicated; 5120 flattened q DOES
+    assert pspec_for((40, 128), ("q_flat", None), RULES_TP, fm) == P()
+    assert pspec_for((5120, 5120), ("embed", "q_flat"), RULES_TP, fm) == \
+        P(None, "model")
+    # same mesh axis never assigned twice
+    assert pspec_for((16, 16), ("clients", "batch"), RULES_TP, fm) == \
+        P("data")
+    # FSDP shards embed over data
+    assert pspec_for((1024, 4096), ("embed", "mlp"), RULES_FSDP, fm) == \
+        P("data", "model")
+    # batch=1 leaves data free for kv_seq (long_500k decode)
+    assert pspec_for((1, 524288, 8, 128),
+                     ("batch", "kv_seq", None, None), RULES_TP, fm) == \
+        P(None, "data")
+
+
+@pytest.mark.parametrize("transport", ["dequant_psum", "code_allgather"])
+def test_train_step_transports_agree(transport):
+    """Both transports must produce identical numerics (same codes/keys)."""
+    cfg = get_reduced("llama3.2-1b")
+    fed = FedConfig(local_steps=2, bits=8, lr=0.05)
+    shape = ShapeConfig("tiny", 16, 4, "train")
+    mesh = _mesh11()
+    with mesh:
+        step, _, _ = build_train_step(cfg, fed, mesh, shape,
+                                      fed_mode="client_dp",
+                                      transport=transport)
+        st = init_train_state(cfg, jax.random.PRNGKey(0), 1)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 2, 4, 16), 0,
+                                  cfg.vocab_size)
+        key = jax.random.key_data(jax.random.PRNGKey(2))
+        st2, m = jax.jit(step)(st, {"tokens": toks}, key)
+    assert np.isfinite(float(m["quant_err_sq"]))
+    leaf = next(iter(st2.server.values()))
+    assert not bool(jnp.isnan(leaf).any())
+    # store for cross-transport comparison
+    test_train_step_transports_agree.results = getattr(
+        test_train_step_transports_agree, "results", {})
+    test_train_step_transports_agree.results[transport] = st2.server
+
+
+def test_transports_identical_results():
+    res = getattr(test_train_step_transports_agree, "results", {})
+    if len(res) == 2:
+        a, b = res["dequant_psum"], res["code_allgather"]
+        for k in a:
+            np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                       atol=1e-6)
+
+
+def test_train_step_mean_preservation_quantfree():
+    """lr=0 + no quantization: server+clients mean is exactly preserved
+    by the distributed step too."""
+    cfg = get_reduced("olmo-1b")
+    fed = FedConfig(local_steps=1, lr=0.0, quantizer="none")
+    shape = ShapeConfig("tiny", 16, 4, "train")
+    mesh = _mesh11()
+    with mesh:
+        step, _, _ = build_train_step(cfg, fed, mesh, shape,
+                                      fed_mode="client_dp", quantized=False)
+        st = init_train_state(cfg, jax.random.PRNGKey(0), 1)
+        # diverge the client
+        st = st._replace(clients={
+            k: v + 0.1 * jax.random.normal(jax.random.PRNGKey(3), v.shape)
+            for k, v in st.clients.items()})
+        toks = jnp.zeros((1, 1, 4, 16), jnp.int32)
+        key = jax.random.key_data(jax.random.PRNGKey(2))
+        st2, _ = jax.jit(step)(st, {"tokens": toks}, key)
+    for k in st.server:
+        mu0 = (st.server[k] + jnp.sum(st.clients[k], 0)) / 2
+        mu1 = (st2.server[k] + jnp.sum(st2.clients[k], 0)) / 2
+        np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu0),
+                                   atol=1e-5)
+
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_reduced
+from repro.configs.base import FedConfig, ShapeConfig
+from repro.launch.steps import build_train_step, build_serve_step, \
+    init_train_state
+from repro.launch.specs import input_specs, abstract_cache
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+cfg = get_reduced("llama3.2-1b").replace(n_heads=8, n_kv_heads=2)
+fed = FedConfig(local_steps=2, lr=0.05, bits=8)
+shape = ShapeConfig("tiny", 16, 8, "train")
+with mesh:
+    step, spec, sh = build_train_step(cfg, fed, mesh, shape,
+                                      fed_mode="client_dp")
+    st = init_train_state(cfg, jax.random.PRNGKey(0), 4)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 2, 2, 16), 0,
+                              cfg.vocab_size)
+    key = jax.random.key_data(jax.random.PRNGKey(2))
+    fn = jax.jit(step, in_shardings=sh)
+    st2, m = fn(st, {"tokens": toks}, key)
+    assert not bool(jnp.isnan(st2.server["embed/tok"]).any())
+    # serve step lowers + compiles on the same mesh
+    sshape = ShapeConfig("d", 64, 8, "decode")
+    sstep, p_spec, c_spec, ssh = build_serve_step(cfg, mesh, sshape)
+    ins = input_specs(cfg, sshape)
+    jax.jit(sstep, in_shardings=ssh).lower(
+        p_spec, c_spec, ins["token"], ins["pos"]).compile()
+print("SUBPROC_OK")
+"""
+
+
+def test_sharded_train_and_serve_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SUBPROC_OK" in r.stdout, r.stdout + r.stderr

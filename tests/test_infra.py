@@ -1,0 +1,103 @@
+"""Optimizers, checkpointing, serving engine, HLO cost walker, roofline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import SHAPES, get_config, get_reduced
+from repro.launch.hlocost import analyze_hlo
+from repro.launch.roofline import active_params, model_flops, roofline
+from repro.models.model import init_lm
+from repro.optim import adam, sgd
+from repro.serving import Request, ServeEngine
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.1, momentum=0.9),
+                                 adam(0.05)])
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        upd, state = opt.update(grads, state, params)
+        params = {"w": params["w"] - upd["w"]}
+    assert float(jnp.linalg.norm(params["w"])) < 1e-2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_reduced("olmo-1b")
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 7, params, extra={"arch": cfg.name})
+    assert latest_step(str(tmp_path)) == 7
+    back = restore_checkpoint(str(tmp_path), 7, params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(params[k]))
+
+
+def test_serving_engine_batched():
+    cfg = get_reduced("llama3.2-1b")
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=3, max_seq=64, temperature=0.0)
+    for i in range(5):
+        eng.submit(Request(prompt=[1 + i, 2, 3], max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.out_tokens) == 6
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
+
+
+def test_serving_greedy_deterministic():
+    cfg = get_reduced("gemma2-2b")
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(cfg, params, max_batch=2, max_seq=32)
+        eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=5))
+        outs.append(eng.run()[0].out_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_hlocost_scan_equals_unrolled():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+    w = jnp.zeros((4, 64, 64))
+    x = jnp.ones((8, 64))
+    t1 = jax.jit(lambda x, w: jax.lax.scan(body, x, w)[0]).lower(
+        x, w).compile().as_text()
+    def unrolled(x, w):
+        for i in range(4):
+            x, _ = body(x, w[i])
+        return x
+    t2 = jax.jit(unrolled).lower(x, w).compile().as_text()
+    r1, r2 = analyze_hlo(t1), analyze_hlo(t2)
+    assert r1["flops"] == r2["flops"] == 2 * 8 * 64 * 64 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    t = roofline(197e12, 0.0, {})
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["bottleneck"] == "compute"
+    t = roofline(0.0, 0.0, {"all-reduce": {"bytes": 50e9, "count": 1}})
+    assert abs(t["collective_s"] - 2.0) < 1e-9  # ring factor 2
+    assert t["bottleneck"] == "collective"
+
+
+def test_active_params_moe_scaling():
+    dense = get_config("olmo-1b")
+    assert abs(active_params(dense) / 1.33e9 - 1) < 0.15
+    moe = get_config("llama4-scout-17b-a16e")
+    total_like = active_params(moe)
+    # ~17B activated for scout (16 routed -> 1 active + 1 shared)
+    assert 10e9 < total_like < 25e9, total_like
+
+
+def test_model_flops_decode_vs_train():
+    cfg = get_config("olmo-1b")
+    tr = model_flops(cfg, SHAPES["train_4k"], local_steps=2, n_slots=16)
+    de = model_flops(cfg, SHAPES["decode_32k"], local_steps=2, n_slots=16)
+    assert tr > de * 1e4
