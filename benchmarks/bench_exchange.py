@@ -1,0 +1,78 @@
+"""Rotated-space exchange baseline (BENCH_exchange.json rows).
+
+Times one full QuAFL quantized exchange (``ExchangePipeline.quafl_round``)
+over a >=1M-parameter model vector at s in {8, 32} sampled clients, for the
+``jnp`` and ``pallas_interpret`` backends, and reports
+
+  * us/round wall time (jitted, post-compile),
+  * the audited rotation counts (s+2 forward / s+1 inverse; the seed
+    composition spent ~5s+1 full-model passes),
+  * analytic HBM bytes moved by the fused path vs the seed composition.
+
+CPU caveat (same as bench_kernels): interpret-mode Pallas timing is a
+correctness-validation datapoint, NOT a TPU projection — the interpreter
+executes the grid serially. The jnp rows are the regression-tracked
+numbers; the derived column carries the analytic traffic model used by the
+roofline."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.compression.pipeline import ExchangePipeline
+from repro.compression.rotation import pad_len
+
+D_FULL = 1 << 20          # 1,048,576 >= 1M parameters
+BITS = 8
+
+
+def _traffic_bytes(d_pad: int, s: int, fused: bool) -> int:
+    """Analytic HBM traffic of one exchange round, fp32 words + b-bit codes.
+
+    Fused path: every rotation pass reads + writes d_pad fp32 once; encodes
+    write codes, snaps read codes + reference. Seed composition additionally
+    materialized the rotated vector, the scaled intermediate and per-client
+    reference rotations (~5s+1 passes)."""
+    f32 = 4 * d_pad
+    code = d_pad * BITS // 8
+    if fused:
+        rot_passes = (s + 2) + (s + 1)            # fwd + inv, fused I/O
+        return rot_passes * 2 * f32 + (s + 1) * code * 2 + s * 2 * f32
+    rot_passes = 5 * s + 1
+    # each un-fused rotation also materializes its input/output, and each
+    # encode/decode re-reads + re-writes the full vector
+    return rot_passes * 2 * f32 + (s + 1) * (3 * f32 + 2 * code)
+
+
+def bench_round(d: int, s: int, backend: str, reps: int):
+    key = jax.random.PRNGKey(0)
+    server = jax.random.normal(key, (d,))
+    Y = server[None] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (s, d))
+    hints = jnp.linalg.norm(Y - server[None], axis=1) + 1e-8
+    pipe = ExchangePipeline(bits=BITS, backend=backend)
+    fn = jax.jit(lambda k, srv, y, h: pipe.quafl_round(k, srv, y, h))
+    jax.block_until_ready(fn(key, server, Y, hints))      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(key, server, Y, hints))
+    us = (time.time() - t0) / reps * 1e6
+    d_pad = pad_len(d)
+    emit(f"exchange_d{d}_s{s}_{backend}", us,
+         f"rot_fwd={pipe.stats.fwd};rot_inv={pipe.stats.inv};"
+         f"bytes_fused={_traffic_bytes(d_pad, s, True):.3g};"
+         f"bytes_seed={_traffic_bytes(d_pad, s, False):.3g}")
+
+
+def main(quick: int = 0):
+    d = (1 << 17) if quick else D_FULL
+    for s in (8, 32):
+        # interpret mode runs the grid serially: one rep is plenty and the
+        # number is a validation datapoint, not a projection
+        bench_round(d, s, "jnp", reps=3)
+        bench_round(d, s, "pallas_interpret", reps=1)
+
+
+if __name__ == "__main__":
+    main()

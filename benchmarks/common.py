@@ -78,7 +78,14 @@ def run_fedavg(fed: FedConfig, rounds: int, seed: int = 0, iid: bool = True,
             "us_per_round": wall / max(rounds, 1) * 1e6}
 
 
+# machine-readable record of every emit() — benchmarks.run dumps this to
+# BENCH_exchange.json so later PRs have a perf trajectory to diff against
+RECORDS: List[Dict] = []
+
+
 def emit(name: str, us: float, derived: str):
+    RECORDS.append({"name": name, "us_per_call": float(us),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 

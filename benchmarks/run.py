@@ -1,16 +1,23 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]``
 prints ``name,us_per_call,derived`` CSV (+ ``# curve:`` blocks carrying the
-convergence data each paper figure plots).
+convergence data each paper figure plots) and writes every emitted row to
+``BENCH_exchange.json`` (machine-readable per-benchmark us + derived
+flops/bytes) so subsequent PRs have a perf trajectory to diff against.
+``--only`` filters benchmarks by name substring (e.g. ``--only exchange``).
 """
+import json
+import os
 import sys
 import time
 
 from benchmarks import (bench_averaging, bench_bits, bench_bits_accounting,
-                        bench_extensions, bench_fedbuff, bench_kernels,
-                        bench_local_steps, bench_peers, bench_quantizer,
-                        bench_roofline, bench_swt, bench_time)
+                        bench_exchange, bench_extensions, bench_fedbuff,
+                        bench_kernels, bench_local_steps, bench_peers,
+                        bench_quantizer, bench_roofline, bench_swt,
+                        bench_time)
+from benchmarks.common import RECORDS
 
 BENCHES = [
     ("Fig1_peers", bench_peers.main),
@@ -24,14 +31,29 @@ BENCHES = [
     ("Lemma38_bits", bench_bits_accounting.main),
     ("ext_scaffold_adaptive", bench_extensions.main),
     ("kernels", bench_kernels.main),
+    ("exchange", bench_exchange.main),
     ("roofline", bench_roofline.main),
 ]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_exchange.json")
+
+
+def _arg_value(flag: str):
+    if flag in sys.argv:
+        i = sys.argv.index(flag)
+        if i + 1 < len(sys.argv):
+            return sys.argv[i + 1]
+    return None
 
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    only = _arg_value("--only")
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
+        if only and only not in name:
+            continue
         t0 = time.time()
         print(f"# === {name} ===")
         try:
@@ -42,6 +64,28 @@ def main() -> None:
         except Exception as e:  # keep the harness going
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if not RECORDS:
+        print(f"# no records emitted (bad --only filter?); "
+              f"leaving {JSON_PATH} untouched")
+        return
+    # quick-scale numbers are not comparable with the committed baseline —
+    # keep them in a sibling file so the perf trajectory stays clean
+    path = JSON_PATH.replace(".json", ".quick.json") if quick else JSON_PATH
+    # merge by name: a partial run (--only) refreshes its own rows without
+    # clobbering the rest of the committed baseline
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = {r["name"]: r for r in json.load(f).get("benches",
+                                                                 [])}
+        except (ValueError, KeyError):
+            merged = {}
+    merged.update({r["name"]: r for r in RECORDS})
+    with open(path, "w") as f:
+        json.dump({"schema": "bench.v1", "quick": quick,
+                   "benches": list(merged.values())}, f, indent=2)
+    print(f"# wrote {len(RECORDS)} records ({len(merged)} total) to {path}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
-
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import FedConfig, LayerSpec, ShapeConfig
@@ -56,8 +54,8 @@ def main():
     fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
                     local_steps=args.local_steps, lr=args.lr, bits=args.bits)
     shape = ShapeConfig("e2e", args.seq, args.batch * args.n_slots, "train")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     key = jax.random.PRNGKey(0)
     with mesh:
         step, _, _ = build_train_step(cfg, fed, mesh, shape,

@@ -1,4 +1,7 @@
 from repro.compression.lattice import (IdentityQuantizer, LatticeMsg,  # noqa: F401
                                        LatticeQuantizer, QSGDQuantizer,
                                        make_quantizer)
+from repro.compression.pipeline import (BACKENDS, Backend,  # noqa: F401
+                                        ExchangePipeline, RotationStats,
+                                        get_backend, wrap_gamma)
 from repro.compression.rotation import rotate, pad_len  # noqa: F401

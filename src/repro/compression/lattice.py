@@ -16,6 +16,13 @@ knows ‖Y − X^i‖ = η·η_i·‖h̃‖; the server uses its previous round 
 the error is proportional to the model *distance*, never the model norm —
 this is exactly what makes direct QSGD-style quantization unsound here
 (paper §2.2 'Fully-Quantized Communication').
+
+The encode/decode math itself lives in the compression *pipeline* backend
+registry (repro.compression.pipeline): ``backend="jnp"`` composes pure-jnp
+ops, ``"pallas_interpret"``/``"pallas"`` run the fused Pallas kernels
+(rotate+round+wrap in one pass; rotate-ref+snap+inverse-rotate in one pass).
+The quantizer is a thin per-message wrapper that fixes the wire format
+(``LatticeMsg``) and the key schedule (split -> rotation key, rounding key).
 """
 from __future__ import annotations
 
@@ -26,7 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression.rotation import DEFAULT_BLOCK, pad_len, rotate
+from repro.compression.rotation import DEFAULT_BLOCK, _signs, pad_len
+from repro.compression.pipeline import (GAMMA_NORM_FLOOR, coord_bound,
+                                        get_backend, wrap_gamma)
 
 
 class LatticeMsg(NamedTuple):
@@ -39,6 +48,7 @@ class LatticeQuantizer:
     bits: int = 8
     block: int = DEFAULT_BLOCK
     safety: float = 8.0    # head-room factor on the wrap window
+    backend: str = "jnp"   # pipeline backend running the actual math
 
     @property
     def levels(self) -> int:
@@ -51,46 +61,56 @@ class LatticeQuantizer:
             return jnp.uint16
         return jnp.uint32
 
+    def _ops(self):
+        return get_backend(self.backend)
+
     # -- γ from the encoder-local distance hint ----------------------------
     def gamma_for(self, dist_hint: jnp.ndarray, d: int) -> jnp.ndarray:
         """dist_hint: upper estimate of ‖x − ref‖₂. After rotation the
         difference coordinates are subgaussian with scale dist/sqrt(d); the
         wrap window 2^b·γ must exceed twice the max coordinate."""
-        d_pad = pad_len(d, self.block)
-        maxcoord = dist_hint / np.sqrt(d_pad) * (np.sqrt(2 * np.log(2 * d_pad + 1)) + 2.0)
-        gamma = self.safety * 2.0 * maxcoord / self.levels
-        return jnp.maximum(gamma, 1e-12)
+        return wrap_gamma(dist_hint, d, bits=self.bits, block=self.block,
+                          safety=self.safety)
 
     # -- Enc ----------------------------------------------------------------
     def encode(self, key, x: jnp.ndarray, dist_hint) -> LatticeMsg:
         """x: flat (d,) fp32. key: shared rotation+rounding key for the
         interaction (the server's round seed — both ends derive it)."""
         d = x.shape[0]
+        d_pad = pad_len(d, self.block)
         gamma = self.gamma_for(jnp.asarray(dist_hint, jnp.float32), d)
+        # fp32 precision floor: the modulo decode needs y/γ (and w/γ) to
+        # keep sub-integer precision, so γ ≥ max|rot(x)|·2^-18. The max
+        # rotated coordinate is estimated pre-rotation from the (rotation-
+        # invariant) norm so γ is available before the fused rotate+quantize
+        # kernel runs. When the distance hint is tiny relative to the model
+        # norm the error bound degrades to the model's own fp32 resolution
+        # instead of silently mis-decoding.
+        gamma = jnp.maximum(gamma, coord_bound(jnp.linalg.norm(x), d_pad)
+                            * GAMMA_NORM_FLOOR)
         krot, krnd = jax.random.split(key)
-        y = rotate(x, krot, self.block)
-        # fp32 precision floor: the modulo decode needs y/γ (and w/γ) to keep
-        # sub-integer precision, so γ ≥ max|y|·2^-18. When the distance hint
-        # is tiny relative to the model norm the error bound degrades to the
-        # model's own fp32 resolution instead of silently mis-decoding.
-        gamma = jnp.maximum(gamma, jnp.max(jnp.abs(y)) * 2.0 ** -18)
-        u = jax.random.uniform(krnd, y.shape, jnp.float32)
-        q = jnp.floor(y / gamma + u)             # stochastic rounding
-        codes = jnp.mod(q, self.levels).astype(self.code_dtype())
-        return LatticeMsg(codes=codes, gamma=gamma)
+        signs = _signs(krot, d_pad)
+        u = jax.random.uniform(krnd, (d_pad,), jnp.float32)
+        x2 = jnp.pad(x.astype(jnp.float32), (0, d_pad - d))[None]
+        codes = self._ops().encode(x2, signs, u[None], gamma[None],
+                                   bits=self.bits, block=self.block,
+                                   want_rotated=False)[0]
+        return LatticeMsg(codes=codes.astype(self.code_dtype()), gamma=gamma)
 
     # -- Dec(ref, msg) -------------------------------------------------------
     def decode(self, key, msg: LatticeMsg, ref: jnp.ndarray) -> jnp.ndarray:
-        """ref: flat (d,) decoding key (paper's y). Returns Q(x) of len d."""
+        """ref: flat (d,) decoding key (paper's y). Returns Q(x) of len d.
+
+        One fused pass: rotate the reference, snap each code to the
+        representative nearest the reference coordinate, inverse-rotate."""
         d = ref.shape[0]
+        d_pad = pad_len(d, self.block)
         krot, _ = jax.random.split(key)
-        w = rotate(ref, krot, self.block)        # rotated reference
-        codes = msg.codes.astype(jnp.float32)
-        # nearest integer to w/γ congruent to codes (mod 2^b)
-        q = codes + self.levels * jnp.round((w / msg.gamma - codes)
-                                            / self.levels)
-        xr = q * msg.gamma
-        x = rotate(xr, krot, self.block, inverse=True)
+        signs = _signs(krot, d_pad)
+        ref2 = jnp.pad(ref.astype(jnp.float32), (0, d_pad - d))[None]
+        x = self._ops().decode(msg.codes[None], ref2, signs,
+                               jnp.reshape(msg.gamma, (1,)), bits=self.bits,
+                               block=self.block)[0]
         return x[:d]
 
     # -- exact bit accounting (Lemma 3.8) ------------------------------------
@@ -137,9 +157,9 @@ class IdentityQuantizer:
         return d * 32
 
 
-def make_quantizer(name: str, bits: int):
+def make_quantizer(name: str, bits: int, backend: str = "jnp"):
     if name == "lattice":
-        return LatticeQuantizer(bits=bits)
+        return LatticeQuantizer(bits=bits, backend=backend)
     if name == "qsgd":
         return QSGDQuantizer(bits=bits)
     if name == "none":

@@ -1,0 +1,355 @@
+"""Compression pipeline: rotated-space quantized exchange + backend registry.
+
+This is the subsystem behind every production use of the position-aware
+lattice quantizer. It has two layers:
+
+**Backend registry** — the four primitive ops of the exchange (batched
+randomized-Hadamard ``rotate``, fused rotate+stochastic-round+wrap
+``encode``, rotated-space positional ``snap``, and the fully fused
+``decode``) exist in three interchangeable implementations:
+
+  * ``"jnp"``             — pure-jnp einsum composition (XLA fuses what it
+                            can; the CPU-CI default),
+  * ``"pallas_interpret"`` — the Pallas kernels from ``repro.kernels.
+                            exchange`` run through the interpreter, so CPU CI
+                            validates the exact code path a TPU executes,
+  * ``"pallas"``          — the same kernels compiled for a real TPU.
+
+Select per experiment with ``FedConfig.kernel_backend``; all backends share
+one ``gamma`` derivation so messages are interchangeable across them.
+
+**Rotated-space exchange** (``ExchangePipeline.quafl_round``) — the QuAFL
+round restructured so every vector is rotated at most once. All messages in
+a round share one rotation key (the paper already assumes shared
+per-interaction keys; sharing across the round's messages is equally valid
+because the rotation is orthogonal), so encode/decode/averaging all happen
+in rotated coordinates and only the final server/client states are
+inverse-rotated. Per round with ``s`` sampled clients this costs exactly
+
+  * ``s + 2`` forward rotations  — the s client messages (fused with their
+    encode), the server's rotation (the uplink decode reference), and the
+    server's own fused encode. The last one re-rotates X_t: its γ depends
+    on the decoded uplink, so it cannot fold into the first server pass;
+    at the fused rotate+quantize kernel granularity that costs one extra
+    rotation (an elementwise quantize of the cached ``srv_rot`` would
+    reach s+1 — see ROADMAP open items),
+  * ``s + 1`` inverse rotations — the s new client states + the new server
+    state, rotated back only after averaging,
+
+down from the seed composition's ``5s + 1`` full-model rotation passes. A
+trace-time ``RotationStats`` counter audits this invariant in the tests.
+
+The downlink decode reference is the client's **current** model Y^i (the
+model it holds when the reply arrives) rather than its pre-round state X^i;
+both satisfy the Lemma 3.1 wrap condition and Y^i is already resident in
+rotated space, which is what removes the per-client reference rotations.
+
+``quafl_round_reference`` is the materialize-everything per-message
+composition over the *same* key/noise/γ derivation — the equivalence oracle
+for the fused path (tests assert fp32-level agreement on full rounds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.rotation import (DEFAULT_BLOCK, _signs,
+                                        hadamard_matrix, pad_len)
+from repro.kernels.exchange import (block_geometry, fused_decode,
+                                    fused_encode, fused_rotate, snap_codes)
+
+BACKENDS = ("jnp", "pallas_interpret", "pallas")
+
+# fp32 precision floor: the modulo decode needs y/γ (and w/γ) to keep
+# sub-integer precision, so γ must not drop below max|rot(x)|·2^-18. The
+# fused encode needs γ BEFORE the rotation runs, so we bound max|rot(x)|
+# by the same subgaussian coordinate estimate the wrap window uses
+# (rotated coordinates have scale ‖x‖/sqrt(d_pad)) — the floor keeps the
+# seed's ~‖x‖·polylog/sqrt(d)·2^-18 scale instead of a loose ‖x‖·2^-18.
+GAMMA_NORM_FLOOR = 2.0 ** -18
+
+
+# ---------------------------------------------------------------------------
+# shared gamma derivation (identical across backends)
+# ---------------------------------------------------------------------------
+
+def coord_bound(norms, d_pad: int):
+    """High-probability bound on the max rotated coordinate of a vector
+    with the given l2 norm (subgaussian scale norm/sqrt(d_pad))."""
+    return (jnp.asarray(norms, jnp.float32) / np.sqrt(d_pad)
+            * (np.sqrt(2 * np.log(2 * d_pad + 1)) + 2.0))
+
+
+def wrap_gamma(dist_hint, d: int, *, bits: int, block: int = DEFAULT_BLOCK,
+               safety: float = 8.0):
+    """Per-message lattice scale from the encoder-local distance hint.
+
+    After rotation the difference coordinates are subgaussian with scale
+    dist/sqrt(d_pad); the wrap window 2^b·γ must exceed twice the max
+    coordinate. Vectorized over ``dist_hint``.
+    """
+    d_pad = pad_len(d, block)
+    gamma = safety * 2.0 * coord_bound(dist_hint, d_pad) / (1 << bits)
+    return jnp.maximum(gamma, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+class Backend(NamedTuple):
+    """The four primitive ops; every op is batched over a message axis."""
+    name: str
+    rotate: Callable    # (x2, signs, *, block, inverse) -> y2
+    encode: Callable    # (x2, signs, u2, gammas, *, bits, block,
+                        #  want_rotated) -> codes | (rotated, codes)
+    snap: Callable      # (codes2, wrot2, gammas, *, bits, block) -> q2
+    decode: Callable    # (codes2, ref2, signs, gammas, *, bits, block) -> x2
+
+
+def _rotate_jnp(x2, signs, *, block=DEFAULT_BLOCK, inverse=False):
+    m, d_pad = x2.shape
+    b, _, r, c, nb = block_geometry(d_pad, block)
+    hr = jnp.asarray(hadamard_matrix(r))
+    hc = jnp.asarray(hadamard_matrix(c))
+    x = x2.astype(jnp.float32)
+    if not inverse:
+        x = x * signs[None, :]
+    y = jnp.einsum("ij,bjk,kl->bil", hr, x.reshape(m * nb, r, c),
+                   hc) * (1.0 / np.sqrt(b))
+    y = y.reshape(m, d_pad)
+    if inverse:
+        y = y * signs[None, :]
+    return y
+
+
+def _encode_jnp(x2, signs, u2, gammas, *, bits=8, block=DEFAULT_BLOCK,
+                want_rotated=False):
+    y = _rotate_jnp(x2, signs, block=block)
+    g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
+    codes = jnp.mod(jnp.floor(y / g + u2),
+                    1 << bits).astype(jnp.uint32)
+    return (y, codes) if want_rotated else codes
+
+
+def _snap_jnp(codes2, wrot2, gammas, *, bits=8, block=DEFAULT_BLOCK):
+    levels = 1 << bits
+    cc = codes2.astype(jnp.float32)
+    g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
+    q = cc + levels * jnp.round((wrot2 / g - cc) / levels)
+    return q * g
+
+
+def _decode_jnp(codes2, ref2, signs, gammas, *, bits=8, block=DEFAULT_BLOCK):
+    w = _rotate_jnp(ref2, signs, block=block)
+    xr = _snap_jnp(codes2, w, gammas, bits=bits, block=block)
+    return _rotate_jnp(xr, signs, block=block, inverse=True)
+
+
+def _pallas_backend(name: str, interpret: bool) -> Backend:
+    return Backend(
+        name=name,
+        rotate=partial(fused_rotate, interpret=interpret),
+        encode=partial(fused_encode, interpret=interpret),
+        snap=partial(snap_codes, interpret=interpret),
+        decode=partial(fused_decode, interpret=interpret),
+    )
+
+
+_REGISTRY = {
+    "jnp": Backend("jnp", _rotate_jnp, _encode_jnp, _snap_jnp, _decode_jnp),
+    "pallas_interpret": _pallas_backend("pallas_interpret", interpret=True),
+    "pallas": _pallas_backend("pallas", interpret=False),
+}
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; choose from {BACKENDS}")
+    return _REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# rotation audit counter (trace-time: counts are structural, not data-dep.)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RotationStats:
+    fwd: int = 0    # full-model forward rotation passes
+    inv: int = 0    # full-model inverse rotation passes
+
+    def reset(self):
+        self.fwd = 0
+        self.inv = 0
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class ExchangePipeline:
+    """Rotated-space quantized-exchange engine over a selectable backend."""
+    bits: int = 8
+    block: int = DEFAULT_BLOCK
+    backend: str = "jnp"
+    safety: float = 8.0
+
+    def __post_init__(self):
+        self.ops = get_backend(self.backend)
+        self.stats = RotationStats()
+
+    # -- helpers ------------------------------------------------------------
+    def _pad(self, x2):
+        d = x2.shape[-1]
+        d_pad = pad_len(d, self.block)
+        if d_pad == d:
+            return x2.astype(jnp.float32)
+        return jnp.pad(x2.astype(jnp.float32),
+                       ((0, 0), (0, d_pad - d)))
+
+    def signs_for(self, krot, d: int):
+        return _signs(krot, pad_len(d, self.block))
+
+    def gammas(self, dist_hints, xnorms, d: int):
+        """Wrap-window γ from the distance hint, floored at the fp32
+        precision limit of the message's own rotated coordinates (estimated
+        pre-rotation from ‖x‖ so it fuses with the encode kernel)."""
+        base = wrap_gamma(dist_hints, d, bits=self.bits, block=self.block,
+                          safety=self.safety)
+        floor = coord_bound(xnorms, pad_len(d, self.block)) * GAMMA_NORM_FLOOR
+        return jnp.maximum(base, floor)
+
+    # -- counted primitive ops (inputs (m, d) original / (m, d_pad) rotated)
+    def rotate(self, x2, signs):
+        self.stats.fwd += int(x2.shape[0])
+        return self.ops.rotate(self._pad(x2), signs, block=self.block)
+
+    def rotate_encode(self, x2, signs, u2, gammas, *, want_rotated=True):
+        self.stats.fwd += int(x2.shape[0])
+        return self.ops.encode(self._pad(x2), signs, u2, gammas,
+                               bits=self.bits, block=self.block,
+                               want_rotated=want_rotated)
+
+    def snap(self, codes2, wrot2, gammas):
+        return self.ops.snap(codes2, wrot2, gammas, bits=self.bits,
+                             block=self.block)
+
+    def unrotate(self, y2, signs, d: int):
+        self.stats.inv += int(y2.shape[0])
+        return self.ops.rotate(y2, signs, block=self.block,
+                               inverse=True)[:, :d]
+
+    def decode(self, codes2, ref2, signs, gammas, d: int):
+        """Full fused Dec(ref, msg): rotate ref + snap + inverse rotate."""
+        m = max(codes2.shape[0], ref2.shape[0])
+        self.stats.fwd += int(ref2.shape[0])
+        self.stats.inv += m
+        return self.ops.decode(codes2, self._pad(ref2), signs, gammas,
+                               bits=self.bits, block=self.block)[:, :d]
+
+    # -- per-round key/noise derivation (shared with the reference path) ----
+    def _round_randomness(self, key, s: int, d: int):
+        d_pad = pad_len(d, self.block)
+        signs = self.signs_for(jax.random.fold_in(key, 0), d)
+        u_srv = jax.random.uniform(jax.random.fold_in(key, 1), (1, d_pad),
+                                   jnp.float32)
+        k_cl = jax.random.split(jax.random.fold_in(key, 2), s)
+        u_cl = jax.vmap(
+            lambda k: jax.random.uniform(k, (d_pad,), jnp.float32))(k_cl)
+        return signs, u_cl, u_srv
+
+    # ------------------------------------------------------------------
+    # one full QuAFL exchange, entirely in rotated coordinates
+    # ------------------------------------------------------------------
+    def quafl_round(self, key, server, Y, hints_up, *, avg_mode="both"):
+        """Quantized exchange + (s+1)-averaging of one server round.
+
+        server: (d,) X_t; Y: (s, d) client models at poll time; hints_up:
+        (s,) upper estimates of ‖Y^i − X_t‖. Returns (server_new (d,),
+        clients_new (s, d), hint_srv, rel_err) — hint_srv is the downlink
+        wrap hint (feeds ``srv_dist_est``), rel_err the mean relative
+        quantization error of the uplink.
+        """
+        s, d = Y.shape
+        signs, u_cl, u_srv = self._round_randomness(key, s, d)
+
+        # uplink: fused rotate+encode of every client message; the rotated
+        # coords come back for free and serve as downlink decode references.
+        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d)
+        Y_rot, codes_up = self.rotate_encode(Y, signs, u_cl, gam_up)
+        srv_rot = self.rotate(server[None], signs)
+        QY_rot = self.snap(codes_up, srv_rot, gam_up)          # (s, d_pad)
+
+        # downlink: the server's γ depends on the decoded uplink, so its
+        # encode cannot fold into the srv_rot pass above — it is a second
+        # fused rotate+quantize pass over X_t (the budgeted "+2").
+        hint_srv = jnp.max(jnp.linalg.norm(QY_rot - srv_rot, axis=1)) + 1e-8
+        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None], d)
+        codes_dn = self.rotate_encode(server[None], signs, u_srv, gam_dn,
+                                      want_rotated=False)
+        QX_rot = self.snap(codes_dn, Y_rot, gam_dn)            # (s, d_pad)
+
+        # (s+1)-averaging in rotated coordinates; inverse-rotate only the
+        # final states.
+        if avg_mode in ("both", "server_only"):
+            srv_new_rot = (srv_rot[0] + jnp.sum(QY_rot, 0)) / (s + 1)
+        else:
+            srv_new_rot = jnp.mean(QY_rot, 0)
+        if avg_mode in ("both", "client_only"):
+            cl_new_rot = QX_rot / (s + 1) + s * Y_rot / (s + 1)
+        else:
+            cl_new_rot = QX_rot
+        server_new = self.unrotate(srv_new_rot[None], signs, d)[0]
+        clients_new = self.unrotate(cl_new_rot, signs, d)
+
+        rel_err = jnp.mean(jnp.linalg.norm(QY_rot - Y_rot, axis=1)
+                           / (jnp.linalg.norm(Y_rot, axis=1) + 1e-9))
+        return server_new, clients_new, hint_srv, rel_err
+
+    # ------------------------------------------------------------------
+    # equivalence oracle: per-message materialize-everything composition
+    # ------------------------------------------------------------------
+    def quafl_round_reference(self, key, server, Y, hints_up, *,
+                              avg_mode="both"):
+        """Same exchange over the same keys/noise/γ, composed message by
+        message in original coordinates (the seed's structure). Used by the
+        tests to pin the rotated-space path; O(s) extra rotation passes."""
+        s, d = Y.shape
+        signs, u_cl, u_srv = self._round_randomness(key, s, d)
+        rot = partial(_rotate_jnp, block=self.block)
+        unrot = partial(_rotate_jnp, block=self.block, inverse=True)
+
+        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d)
+        Yp = self._pad(Y)
+        srvp = self._pad(server[None])
+        codes_up = _encode_jnp(Yp, signs, u_cl, gam_up, bits=self.bits,
+                               block=self.block)
+        # each message decoded separately against the server (full rotate /
+        # snap / inverse-rotate per message), back in original space
+        QY = unrot(_snap_jnp(codes_up, rot(srvp, signs), gam_up,
+                             bits=self.bits), signs)
+        hint_srv = jnp.max(jnp.linalg.norm(QY - srvp, axis=1)) + 1e-8
+        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None], d)
+        codes_dn = _encode_jnp(srvp, signs, u_srv, gam_dn, bits=self.bits,
+                               block=self.block)
+        QX = unrot(_snap_jnp(codes_dn, rot(Yp, signs), gam_dn,
+                             bits=self.bits), signs)
+
+        if avg_mode in ("both", "server_only"):
+            srv_new = (srvp[0] + jnp.sum(QY, 0)) / (s + 1)
+        else:
+            srv_new = jnp.mean(QY, 0)
+        if avg_mode in ("both", "client_only"):
+            cl_new = QX / (s + 1) + s * Yp / (s + 1)
+        else:
+            cl_new = QX
+        rel_err = jnp.mean(jnp.linalg.norm(QY - Yp, axis=1)
+                           / (jnp.linalg.norm(Yp, axis=1) + 1e-9))
+        return srv_new[:d], cl_new[:, :d], hint_srv, rel_err

@@ -166,6 +166,12 @@ class FedConfig:
     weighted: bool = False         # eta_i = H_min / H_i dampening
     quantizer: str = "lattice"     # 'lattice' | 'qsgd' | 'none'
     bits: int = 8
+    # compression-pipeline kernel backend (repro.compression.pipeline):
+    #  'jnp'              — pure-jnp composition (CPU CI default)
+    #  'pallas_interpret' — Pallas kernels through the interpreter (CPU
+    #                       validation of the exact TPU code path)
+    #  'pallas'           — compiled Pallas kernels (real TPU)
+    kernel_backend: str = "jnp"
     # client speed model (App. A timing experiments): step time ~ Exp(lam)
     slow_frac: float = 0.3
     lam_fast: float = 0.5

@@ -18,17 +18,34 @@ only collectives left are the ones the ALGORITHM requires:
 
 Semantics are an exact instance of Alg. 1 with a different (shard-aligned)
 rotation block partition.
+
+Perf (this PR): the lattice path now runs ROTATED-SPACE through the
+compression pipeline — 3 forward passes per chunk (the fused
+rotate+encode of the client update Y, the server rotation that serves as
+the uplink decode reference, and the server's fused downlink encode,
+whose γ depends on the decoded uplink), every snap/sum happens on rotated
+coordinates via the fused kernels, and only the two new states are
+inverse-rotated (2 passes). The downlink Enc(X_t) is decoded against the
+client's CURRENT model Y^i — the same reference rule as the flat
+simulator's pipeline.quafl_round, and the model the client actually holds
+at decode time — so the pre-round state X^i needs no rotation at all.
+The seed composition re-rotated the reference inside every decode:
+4 + 2·n_slots passes on the codes transport. The rounding noise is now
+folded with the client index (the seed reused one noise vector across the
+client axis); rotation keys remain shared across clients so codes stay
+cross-decodable.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compression.lattice import LatticeQuantizer
+from repro.compression.pipeline import ExchangePipeline
+from repro.utils.compat import shard_map
 from repro.utils.tree import fold_in_str
 
 
@@ -47,6 +64,101 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
     model_axes = tuple(a for a in mesh_axes if a != client_axis)
     client_in_mesh = client_axis in mesh.shape
     denom = n_slots + 1
+    pipe = (ExchangePipeline(bits=quant.bits, block=quant.block,
+                             safety=quant.safety, backend=quant.backend)
+            if isinstance(quant, LatticeQuantizer) else None)
+
+    def _psum_norm(sq, axes):
+        for a in axes:
+            sq = jax.lax.psum(sq, a)
+        return jnp.sqrt(sq)
+
+    def _lattice_leaf(kk, srv, y, cl_flat):
+        """Rotated-space exchange of one local leaf chunk: 3 forward + 2
+        inverse rotation passes with the chunk-shared key (cl_flat only
+        feeds the uplink hint; the downlink decodes against y)."""
+        d = srv.shape[0]
+        kk_cl = (jax.lax.axis_index(client_axis) if client_in_mesh else 0)
+        k_up, k_dn = jax.random.fold_in(kk, 1), jax.random.fold_in(kk, 2)
+        signs = pipe.signs_for(jax.random.split(k_up)[0], d)
+        d_pad = signs.shape[0]
+
+        # hints: ||Y - X^i|| over the model axes (client-local value)
+        h_up = _psum_norm(jnp.sum(jnp.square(y - cl_flat)),
+                          model_axes) + 1e-8
+        gam_up = pipe.gammas(h_up[None], jnp.linalg.norm(y)[None], d)
+        u_up = jax.random.uniform(
+            jax.random.fold_in(jax.random.split(k_up)[1], kk_cl),
+            (1, d_pad), jnp.float32)
+        y_rot, codes = pipe.rotate_encode(y[None], signs, u_up, gam_up)
+        srv_rot = pipe.rotate(srv[None], signs)
+        qy_own = pipe.snap(codes, srv_rot, gam_up)                # rotated
+        if codes_transport and client_in_mesh:
+            # move b-bit codes over the interconnect, not the kernels'
+            # uint32 working dtype (the whole point of this transport)
+            codes_all = jax.lax.all_gather(
+                codes[0].astype(quant.code_dtype()), client_axis)
+            gam_all = jax.lax.all_gather(gam_up[0], client_axis)
+            qy_sum = jnp.sum(pipe.snap(codes_all, srv_rot, gam_all), 0,
+                             keepdims=True)
+        else:
+            qy_sum = qy_own
+            if client_in_mesh:
+                qy_sum = jax.lax.psum(qy_own, client_axis)
+        srv_new_rot = (srv_rot + qy_sum) / denom
+
+        # server -> client: encode once (same on every client slice),
+        # decode against the client's current model Y — all in rotated
+        # space, same reference rule as pipeline.quafl_round
+        h_dn = _psum_norm(jnp.sum(jnp.square(qy_own - srv_rot)), model_axes)
+        if client_in_mesh:
+            h_dn = jax.lax.pmax(h_dn, client_axis)
+        gam_dn = pipe.gammas(2.0 * h_dn[None] + 1e-8,
+                             jnp.linalg.norm(srv)[None], d)
+        u_dn = jax.random.uniform(jax.random.split(k_dn)[1], (1, d_pad),
+                                  jnp.float32)
+        codes_dn = pipe.rotate_encode(srv[None], signs, u_dn, gam_dn,
+                                      want_rotated=False)
+        qx_rot = pipe.snap(codes_dn, y_rot, gam_dn)
+        cl_new_rot = qx_rot / denom + n_slots * y_rot / denom
+
+        srv_new = pipe.unrotate(srv_new_rot, signs, d)[0]
+        cl_new = pipe.unrotate(cl_new_rot, signs, d)[0]
+        qerr = jnp.sum(jnp.square(qy_own[0] - y_rot[0])) / n_slots
+        return srv_new, cl_new, qerr
+
+    def _generic_leaf(kk, srv, y, cl_flat):
+        """Per-message composition for quantizers without a rotation."""
+        h_up = _psum_norm(jnp.sum(jnp.square(y - cl_flat)),
+                          model_axes) + 1e-8
+        k_up = jax.random.fold_in(kk, 1)
+        msg = quant.encode(k_up, y, h_up)
+        if codes_transport and client_in_mesh:
+            codes_all = jax.lax.all_gather(msg.codes, client_axis)
+            gam_all = jax.lax.all_gather(msg.gamma, client_axis)
+            qy_sum = jnp.zeros_like(srv)
+            for j in range(n_slots):
+                m_j = type(msg)(codes=codes_all[j], gamma=gam_all[j])
+                qy_sum = qy_sum + quant.decode(k_up, m_j, srv)
+            qy_own = quant.decode(k_up, msg, srv)
+        else:
+            qy_own = quant.decode(k_up, msg, srv)
+            qy_sum = qy_own
+            if client_in_mesh:
+                qy_sum = jax.lax.psum(qy_own, client_axis)
+        srv_new = (srv + qy_sum) / denom
+
+        h_dn = _psum_norm(jnp.sum(jnp.square(qy_own - srv)), model_axes)
+        if client_in_mesh:
+            h_dn = jax.lax.pmax(h_dn, client_axis)
+        k_dn = jax.random.fold_in(kk, 2)
+        msg_s = quant.encode(k_dn, srv, 2.0 * h_dn + 1e-8)
+        qx = quant.decode(k_dn, msg_s, cl_flat)
+        cl_new = qx / denom + n_slots * y / denom
+        qerr = jnp.sum(jnp.square(qy_own - y)) / n_slots
+        return srv_new, cl_new, qerr
+
+    leaf_fn = _lattice_leaf if pipe is not None else _generic_leaf
 
     def local_fn(server_l, clients_l, Ys_l, key):
         key = jax.random.wrap_key_data(key)
@@ -64,45 +176,8 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
             y, dlen = _pad1024(Ys_l[k][0].astype(jnp.float32).ravel())
             cl_flat, _ = _pad1024(cl.astype(jnp.float32).ravel())
 
-            # hints: ||Y - X^i|| over the model axes (client-local value)
-            h_up = jnp.sum(jnp.square(y - cl_flat))
-            for a in model_axes:
-                h_up = jax.lax.psum(h_up, a)
-            h_up = jnp.sqrt(h_up) + 1e-8
-
-            kk_cl = (jax.lax.axis_index(client_axis) if client_in_mesh
-                     else 0)
-            k_up = jax.random.fold_in(kk, 1)
-            msg = quant.encode(k_up, y, h_up)
-            if codes_transport and client_in_mesh:
-                codes_all = jax.lax.all_gather(msg.codes, client_axis)
-                gam_all = jax.lax.all_gather(msg.gamma, client_axis)
-                qy_sum = jnp.zeros_like(srv)
-                for j in range(n_slots):
-                    m_j = type(msg)(codes=codes_all[j], gamma=gam_all[j])
-                    qy_sum = qy_sum + quant.decode(k_up, m_j, srv)
-                qy_own = quant.decode(k_up, msg, srv)
-            else:
-                qy_own = quant.decode(k_up, msg, srv)
-                qy_sum = qy_own
-                if client_in_mesh:
-                    qy_sum = jax.lax.psum(qy_own, client_axis)
-            srv_new = (srv + qy_sum) / denom
-
-            # server -> client: encode once (same on every client slice),
-            # decode against the local client chunk
-            h_dn = jnp.sum(jnp.square(qy_own - srv))
-            for a in model_axes:
-                h_dn = jax.lax.psum(h_dn, a)
-            h_dn = jnp.sqrt(h_dn)
-            if client_in_mesh:
-                h_dn = jax.lax.pmax(h_dn, client_axis)
-            k_dn = jax.random.fold_in(kk, 2)
-            msg_s = quant.encode(k_dn, srv, 2.0 * h_dn + 1e-8)
-            qx = quant.decode(k_dn, msg_s, cl_flat)
-            cl_new = qx / denom + n_slots * y / denom
-
-            qerr += jnp.sum(jnp.square(qy_own - y)) / n_slots
+            srv_new, cl_new, qerr_k = leaf_fn(kk, srv, y, cl_flat)
+            qerr += qerr_k
             shp, dt = server_l[k].shape, server_l[k].dtype
             server_new[k] = srv_new[:dlen].reshape(shp).astype(dt)
             clients_new[k] = cl_new[:dlen].reshape((1,) + shp).astype(
@@ -113,8 +188,8 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
 
     in_specs = (srv_pspecs, cl_pspecs, cl_pspecs, P())
     out_specs = (srv_pspecs, cl_pspecs, P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
 
     def exchange(server, clients, Ys, key_data):
         return fn(server, clients, Ys, key_data)

@@ -3,9 +3,15 @@
 Clients run continuously; when client i finishes its K local steps (duration
 Gamma(K, λ_i)) it ships the model DELTA to a shared buffer and restarts from
 the current server model. Once the buffer holds Z updates the server applies
-the averaged delta. Optionally the deltas are QSGD-quantized (the paper's
-Fig. 6/16 variant — FedBuff is incompatible with the lattice quantizer
-because the server has no decoding key for a client's stale base model).
+the averaged delta. The deltas can be quantized (``quantize=True``) with:
+
+  * ``quantizer="qsgd"``    — the paper's Fig. 6/16 variant. FedBuff cannot
+    lattice-quantize *models* (the server has no decoding key for a
+    client's stale base model)…
+  * ``quantizer="lattice"`` — …but the DELTA is position-aware decodable
+    against the zero vector with hint ‖Δ‖, so delta compression rides the
+    same fused rotate+quantize pipeline as QuAFL (backend selected by
+    ``FedConfig.kernel_backend``). Beyond-paper option.
 
 Event-driven python loop around a jitted local-steps function (FedBuff's
 control flow is data-dependent, so it is simulated rather than SPMD)."""
@@ -35,14 +41,17 @@ class FedBuff:
     buffer_size: int = 10
     server_lr: float = 1.0
     quantize: bool = False
+    quantizer: str = "qsgd"   # 'qsgd' (paper) | 'lattice' (delta-vs-zero)
     uniform_speeds: bool = False
 
     def __post_init__(self):
         n = self.fed.n_clients
         self.lam = (np.full(n, self.fed.lam_fast, np.float32)
                     if self.uniform_speeds else client_speeds(self.fed, n))
-        self.quant = make_quantizer("qsgd" if self.quantize else "none",
-                                    self.fed.bits)
+        self.quant = make_quantizer(self.quantizer if self.quantize
+                                    else "none", self.fed.bits,
+                                    getattr(self.fed, "kernel_backend",
+                                            "jnp"))
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
 
@@ -90,8 +99,12 @@ class FedBuff:
                 lambda a: a[i], data), sub)
             if self.quantize:
                 jkey, qk = jax.random.split(jkey)
-                msg = self.quant.encode(qk, delta)
-                delta = self.quant.decode(qk, msg)
+                # lattice path: deltas are position-aware decodable against
+                # the zero vector with hint ‖Δ‖ (one fused encode + decode
+                # pass through the pipeline backend); QSGD ignores both.
+                msg = self.quant.encode(
+                    qk, delta, jnp.linalg.norm(delta) + 1e-12)
+                delta = self.quant.decode(qk, msg, jnp.zeros_like(delta))
                 bits += self.quant.message_bits(self.d)
             else:
                 bits += self.d * 32

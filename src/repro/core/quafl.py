@@ -17,11 +17,20 @@ Faithfulness notes:
    the unweighted variant (paper App. A experiments) sets η_i = 1.
  * Both directions are quantized with the position-aware lattice quantizer.
    The server's Enc(X_t) is decoded by each sampled client against its own
-   X^i; the clients' Enc(Y^i) are decoded by the server against X_t
-   (pseudocode lines 4–7).
+   current model; the clients' Enc(Y^i) are decoded by the server against
+   X_t (pseudocode lines 4–7).
  * Averaging: X_{t+1} = (X_t + Σ Q(Y^i)) / (s+1);
    X^i ← Q(X_t)/(s+1) + s·Y^i/(s+1) — preserves the model mean μ_t up to
    gradient and quantization noise (the paper's potential argument).
+
+Perf: with ``quantizer="lattice"`` the whole exchange runs through the
+rotated-space compression pipeline (repro.compression.pipeline): one shared
+per-round rotation key, all encode/decode/averaging in rotated coordinates,
+exactly s+2 forward + s+1 inverse full-model rotations per round (the seed
+composition spent ~5s+1). ``FedConfig.kernel_backend`` selects the
+jnp / Pallas-interpret / Pallas implementation of the fused kernels;
+``exchange_impl="reference"`` keeps the per-message materialize-everything
+oracle for equivalence testing.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression.lattice import make_quantizer
+from repro.compression.pipeline import ExchangePipeline
 from repro.configs.base import FedConfig
 from repro.utils.tree import (tree_flatten_vector, tree_unflatten_vector)
 
@@ -72,15 +82,29 @@ class QuAFL:
     batch_fn: Callable[[Any, jax.Array], Any]  # (client_data, key) -> batch
     avg_mode: str = "both"                 # 'both'|'server_only'|'client_only'
     uniform_speeds: bool = False
+    exchange_impl: str = "pipeline"        # 'pipeline' | 'reference' (oracle)
 
     def __post_init__(self):
-        self.quant = make_quantizer(self.fed.quantizer, self.fed.bits)
+        backend = getattr(self.fed, "kernel_backend", "jnp")
+        self.quant = make_quantizer(self.fed.quantizer, self.fed.bits,
+                                    backend)
+        # rotated-space exchange engine (lattice only — QSGD/identity have no
+        # rotation to restructure around); shares every knob with the
+        # quantizer so bit accounting and γ derivation stay in lockstep
+        self.pipeline = (ExchangePipeline(bits=self.quant.bits,
+                                          block=self.quant.block,
+                                          safety=self.quant.safety,
+                                          backend=backend)
+                         if self.fed.quantizer == "lattice" else None)
         n = self.fed.n_clients
         self.lam = (np.full(n, self.fed.lam_fast, np.float32)
                     if self.uniform_speeds else client_speeds(self.fed, n))
         self.H = expected_steps(self.fed, self.lam)
         self.eta_i = ((self.H.min() / self.H) if self.fed.weighted
                       else np.ones(n)).astype(np.float32)
+        # hoisted once — the traced round body only indexes these
+        self._lam_j = jnp.asarray(self.lam)
+        self._eta_j = jnp.asarray(self.eta_i)
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
 
@@ -126,7 +150,7 @@ class QuAFL:
 
         idx = jax.random.choice(k_sel, n, (s,), replace=False)
         elapsed = state.sim_time + fed.swt + fed.sit - state.last_time[idx]
-        lam = jnp.asarray(self.lam)[idx]
+        lam = self._lam_j[idx]
         h_steps = jnp.minimum(jax.random.poisson(k_h, lam * elapsed),
                               fed.local_steps).astype(jnp.int32)
 
@@ -134,40 +158,56 @@ class QuAFL:
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
         h_tilde = jax.vmap(self._local_progress)(cl, data_s, h_steps, keys)
-        eta_i = jnp.asarray(self.eta_i)[idx][:, None]
-        Y = cl - fed.lr * eta_i * h_tilde                        # (s, d)
+        eta_i = self._eta_j[idx][:, None]
+        prog = fed.lr * eta_i * h_tilde                          # η·η_i·h̃
+        Y = cl - prog                                            # (s, d)
 
         # --- quantized exchange (shared per-interaction keys) -----------
-        kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
-        prog_norm = jnp.linalg.norm(fed.lr * eta_i * h_tilde, axis=1)
+        prog_norm = jnp.linalg.norm(prog, axis=1)
+        hints_up = prog_norm + state.srv_dist_est + 1e-8
 
-        def enc_dec_up(y, kk, hint):
-            msg = self.quant.encode(kk, y, hint + 1e-8)
-            return self.quant.decode(kk, msg, state.server)
+        if self.pipeline is not None:
+            # rotated-space engine: one shared rotation per round, all
+            # encode/decode/averaging in rotated coordinates (s+2 forward,
+            # s+1 inverse full-model rotations — audited in the tests).
+            fn = (self.pipeline.quafl_round
+                  if self.exchange_impl == "pipeline"
+                  else self.pipeline.quafl_round_reference)
+            server_new, cl_new, hint_srv, rel_err = fn(
+                k_q, state.server, Y, hints_up, avg_mode=self.avg_mode)
+        else:
+            # QSGD / identity: no rotation to restructure around
+            kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
 
-        QY = jax.vmap(enc_dec_up)(Y, kq_cl,
-                                  prog_norm + state.srv_dist_est)  # (s, d)
+            def enc_dec_up(y, kk, hint):
+                msg = self.quant.encode(kk, y, hint)
+                return self.quant.decode(kk, msg, state.server)
 
-        # server -> clients: ONE encode, per-client decode vs own X^i
-        kq_srv = jax.random.fold_in(k_q, 0)
-        hint_srv = (jnp.max(jnp.linalg.norm(QY - state.server[None], axis=1))
-                    + 1e-8)
-        msg_srv = self.quant.encode(kq_srv, state.server, hint_srv)
-        QX = jax.vmap(lambda ref: self.quant.decode(kq_srv, msg_srv, ref))(cl)
+            QY = jax.vmap(enc_dec_up)(Y, kq_cl, hints_up)        # (s, d)
 
-        # --- averaging ----------------------------------------------------
-        if self.avg_mode == "both":
-            server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
-            cl_new = QX / (s + 1) + s * Y / (s + 1)
-        elif self.avg_mode == "server_only":
-            server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
-            cl_new = QX
-        elif self.avg_mode == "client_only":
-            server_new = jnp.mean(QY, 0)
-            cl_new = QX / (s + 1) + s * Y / (s + 1)
-        else:  # 'none' — plain replacement both sides
-            server_new = jnp.mean(QY, 0)
-            cl_new = QX
+            # server -> clients: ONE encode, per-client decode vs own X^i
+            kq_srv = jax.random.fold_in(k_q, 0)
+            hint_srv = (jnp.max(jnp.linalg.norm(QY - state.server[None],
+                                                axis=1)) + 1e-8)
+            msg_srv = self.quant.encode(kq_srv, state.server, hint_srv)
+            QX = jax.vmap(
+                lambda ref: self.quant.decode(kq_srv, msg_srv, ref))(cl)
+
+            # --- averaging ------------------------------------------------
+            if self.avg_mode == "both":
+                server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
+                cl_new = QX / (s + 1) + s * Y / (s + 1)
+            elif self.avg_mode == "server_only":
+                server_new = (state.server + jnp.sum(QY, 0)) / (s + 1)
+                cl_new = QX
+            elif self.avg_mode == "client_only":
+                server_new = jnp.mean(QY, 0)
+                cl_new = QX / (s + 1) + s * Y / (s + 1)
+            else:  # 'none' — plain replacement both sides
+                server_new = jnp.mean(QY, 0)
+                cl_new = QX
+            rel_err = jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
+                               / (jnp.linalg.norm(Y, axis=1) + 1e-9))
         clients_new = state.clients.at[idx].set(cl_new)
 
         bits = (s + 1) * self.quant.message_bits(self.d)
@@ -181,8 +221,7 @@ class QuAFL:
         metrics = {
             "h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
             "h_zero_frac": jnp.mean((h_steps == 0).astype(jnp.float32)),
-            "quant_err": jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
-                                  / (jnp.linalg.norm(Y, axis=1) + 1e-9)),
+            "quant_err": rel_err,
             "bits": jnp.asarray(bits, jnp.float32),
         }
         return state, metrics

@@ -13,6 +13,15 @@ Two aggregation transports (see DESIGN.md §3):
   * code_allgather — replicate the packed integer codes (uint8/16) across the
                      client axis, decode all messages locally, sum locally.
                      Moves b-bit codes over the interconnect instead of fp32.
+
+The per-leaf encode/decode math runs through the compression-pipeline
+backend selected by ``FedConfig.kernel_backend`` (the quantizer delegates to
+repro.compression.pipeline): each Enc is one fused rotate+round+wrap pass
+and each Dec one fused rotate-ref+snap+inverse-rotate pass — no
+materialized rotation intermediates. The fully rotated-space restructuring
+(one rotation per vector per ROUND) lives in repro.core.exchange_local for
+the shard-local transports and repro.compression.pipeline.quafl_round for
+the flat simulator.
 """
 from __future__ import annotations
 

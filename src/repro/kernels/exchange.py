@@ -1,0 +1,271 @@
+"""Pallas TPU kernels: fused rotated-space lattice exchange.
+
+The per-round hot path of the quantized exchange is ``rotate -> stochastic
+round -> wrap`` on the way out and ``snap -> inverse rotate`` on the way
+back, over every sampled client's full model vector. The seed composition
+materialized every intermediate (rotated coords, scaled coords, rounded
+integers) in HBM; these kernels fuse each direction into one VMEM-resident
+pass per (r, c) Hadamard block:
+
+  * ``fused_rotate``  — sign flip + H_r @ X @ H_c / sqrt(rc) (fwd or inv)
+  * ``fused_encode``  — rotate + floor(y/gamma + u) mod 2^b in one pass;
+                        optionally also emits the rotated coords (the
+                        rotated-space pipeline reuses them as the decode
+                        reference, so the extra output replaces a whole
+                        second rotation pass)
+  * ``snap_codes``    — positional snap only (stay in rotated space; the
+                        pipeline averages rotated vectors and inverse-rotates
+                        once at the end of the round)
+  * ``fused_decode``  — rotate the reference + snap + inverse rotate: the
+                        full ``Dec(ref, msg)`` in one pass (used by the
+                        leaf-wise transport and the quantizer API)
+
+All kernels run over a ``(m, nb)`` grid — ``m`` messages by ``nb`` Hadamard
+blocks — with one (r, c) block per step; the two small Hadamard factors hit
+the MXU directly. Batched operands broadcast along ``m`` through the block
+index maps (no HBM materialization of the broadcast). Per-message scales
+``gamma`` ride as lane-aligned (m, 128) rows so each grid step gets a
+regular (1, 128) VMEM tile — direct loads from unblocked ``pl.ANY`` refs
+do not lower on real TPUs.
+
+On this CPU container everything runs with ``interpret=True``; the
+``pallas`` backend flips that off on a real TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.compression.rotation import (DEFAULT_BLOCK, _block_size, _factor,
+                                        hadamard_matrix, pad_len)
+
+
+LANE = 128
+
+
+def _gamma_rows(gammas, m: int) -> jnp.ndarray:
+    """Per-message scales as lane-aligned (m, LANE) rows (TPU-lowerable)."""
+    g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
+    return jnp.broadcast_to(g, (m, LANE))
+
+
+def block_geometry(d: int, block: int = DEFAULT_BLOCK):
+    """(b, d_pad, r, c, nb) for a length-d vector under ``block``-blocking."""
+    b = _block_size(d, block)
+    d_pad = pad_len(d, block)
+    r, c = _factor(b)
+    return b, d_pad, r, c, d_pad // b
+
+
+def _had(r: int, c: int):
+    return jnp.asarray(hadamard_matrix(r)), jnp.asarray(hadamard_matrix(c))
+
+
+def _row_spec(m: int, r: int, c: int):
+    """BlockSpec for a (m_or_1, nb, r, c) operand broadcast along the grid's
+    message axis when its leading dim is 1."""
+    if m == 1:
+        return pl.BlockSpec((1, 1, r, c), lambda i, j: (0, j, 0, 0))
+    return pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0))
+
+
+def _blk(x2: jnp.ndarray, nb: int, r: int, c: int):
+    return x2.reshape(x2.shape[0], nb, r, c)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _rotate_kernel(x_ref, s_ref, hr_ref, hc_ref, o_ref, *, scale: float,
+                   inverse: bool):
+    x = x_ref[0, 0].astype(jnp.float32)
+    if not inverse:
+        x = x * s_ref[0]
+    y = jnp.dot(hr_ref[...], x, preferred_element_type=jnp.float32)
+    y = jnp.dot(y, hc_ref[...], preferred_element_type=jnp.float32) * scale
+    if inverse:
+        y = y * s_ref[0]
+    o_ref[0, 0] = y
+
+
+def _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref, y_ref,
+                   *, scale: float, levels: int, want_rotated: bool):
+    x = x_ref[0, 0].astype(jnp.float32) * s_ref[0]
+    y = jnp.dot(hr_ref[...], x, preferred_element_type=jnp.float32)
+    y = jnp.dot(y, hc_ref[...], preferred_element_type=jnp.float32) * scale
+    g = g_ref[0, 0]
+    q = jnp.floor(y / g + u_ref[0, 0])
+    c_ref[0, 0] = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    if want_rotated:
+        y_ref[0, 0] = y
+
+
+def _snap_kernel(c_ref, w_ref, g_ref, o_ref, *, levels: int):
+    g = g_ref[0, 0]
+    c = c_ref[0, 0].astype(jnp.float32)
+    q = c + levels * jnp.round((w_ref[0, 0] / g - c) / levels)
+    o_ref[0, 0] = q * g
+
+
+def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, o_ref, *,
+                   scale: float, levels: int):
+    s = s_ref[0]
+    w = ref_ref[0, 0].astype(jnp.float32) * s
+    w = jnp.dot(hr_ref[...], w, preferred_element_type=jnp.float32)
+    w = jnp.dot(w, hc_ref[...], preferred_element_type=jnp.float32) * scale
+    g = g_ref[0, 0]
+    c = c_ref[0, 0].astype(jnp.float32)
+    q = c + levels * jnp.round((w / g - c) / levels)
+    x = jnp.dot(hr_ref[...], q * g, preferred_element_type=jnp.float32)
+    x = jnp.dot(x, hc_ref[...], preferred_element_type=jnp.float32) * scale
+    o_ref[0, 0] = x * s
+
+
+# ---------------------------------------------------------------------------
+# jit'd wrappers — all take (m, d_pad) message batches + (d_pad,) signs
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block", "inverse", "interpret"))
+def fused_rotate(x2: jnp.ndarray, signs: jnp.ndarray, *,
+                 block: int = DEFAULT_BLOCK, inverse: bool = False,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Batched randomized-Hadamard rotation: (m, d_pad) -> (m, d_pad)."""
+    m, d_pad = x2.shape
+    b, _, r, c, nb = block_geometry(d_pad, block)
+    hr, hc = _had(r, c)
+    out = pl.pallas_call(
+        partial(_rotate_kernel, scale=1.0 / np.sqrt(b), inverse=inverse),
+        grid=(m, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, r, c), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((c, c), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
+        interpret=interpret,
+    )(_blk(x2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c), hr, hc)
+    return out.reshape(m, d_pad)
+
+
+@partial(jax.jit, static_argnames=("bits", "block", "want_rotated",
+                                   "interpret"))
+def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
+                 gammas: jnp.ndarray, *, bits: int = 8,
+                 block: int = DEFAULT_BLOCK, want_rotated: bool = False,
+                 interpret: bool = True):
+    """Rotate + stochastic-round + wrap in one pass.
+
+    x2: (m, d_pad) padded messages; u2: U(0,1) rounding noise, same shape;
+    gammas: (m,) per-message scales. Returns codes (m, d_pad) uint32, or
+    (rotated, codes) when ``want_rotated`` (one extra VMEM->HBM store per
+    block instead of a second full rotation pass later).
+    """
+    m, d_pad = x2.shape
+    b, _, r, c, nb = block_geometry(d_pad, block)
+    hr, hc = _had(r, c)
+    out_shape = [jax.ShapeDtypeStruct((m, nb, r, c), jnp.uint32)]
+    out_specs = [pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0))]
+    if want_rotated:
+        out_shape.append(jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, r, c),
+                                      lambda i, j: (i, j, 0, 0)))
+
+    def body(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref,
+             *maybe_y):
+        _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref,
+                       maybe_y[0] if maybe_y else None,
+                       scale=1.0 / np.sqrt(b), levels=1 << bits,
+                       want_rotated=want_rotated)
+
+    res = pl.pallas_call(
+        body,
+        grid=(m, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, r, c), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((c, c), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(_blk(x2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
+      _blk(u2.astype(jnp.float32), nb, r, c), hr, hc, _gamma_rows(gammas, m))
+    codes = res[0].reshape(m, d_pad)
+    if want_rotated:
+        return res[1].reshape(m, d_pad), codes
+    return codes
+
+
+@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def snap_codes(codes2: jnp.ndarray, wrot2: jnp.ndarray, gammas: jnp.ndarray,
+               *, bits: int = 8, block: int = DEFAULT_BLOCK,
+               interpret: bool = True) -> jnp.ndarray:
+    """Positional snap in rotated space: gamma * (c + 2^b round((w/g-c)/2^b)).
+
+    codes2 (mc, d_pad) and wrot2 (mw, d_pad) broadcast along the message
+    axis (mc or mw may be 1); gammas has the codes' batch size.
+    """
+    mc, d_pad = codes2.shape
+    mw = wrot2.shape[0]
+    m = max(mc, mw)
+    _, _, r, c, nb = block_geometry(d_pad, block)
+    out = pl.pallas_call(
+        partial(_snap_kernel, levels=1 << bits),
+        grid=(m, nb),
+        in_specs=[
+            _row_spec(mc, r, c),
+            _row_spec(mw, r, c),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
+        interpret=interpret,
+    )(_blk(codes2.astype(jnp.uint32), nb, r, c),
+      _blk(wrot2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
+    return out.reshape(m, d_pad)
+
+
+@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
+                 gammas: jnp.ndarray, *, bits: int = 8,
+                 block: int = DEFAULT_BLOCK,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Full positional decode: rotate ref + snap + inverse rotate, fused.
+
+    codes2 (mc, d_pad) vs references ref2 (mr, d_pad) in ORIGINAL space;
+    broadcasts along the message axis. Returns (max(mc, mr), d_pad) fp32 in
+    original coordinates (caller unpads with [:, :d]).
+    """
+    mc, d_pad = codes2.shape
+    mr = ref2.shape[0]
+    m = max(mc, mr)
+    b, _, r, c, nb = block_geometry(d_pad, block)
+    hr, hc = _had(r, c)
+    out = pl.pallas_call(
+        partial(_decode_kernel, scale=1.0 / np.sqrt(b), levels=1 << bits),
+        grid=(m, nb),
+        in_specs=[
+            _row_spec(mc, r, c),
+            _row_spec(mr, r, c),
+            pl.BlockSpec((1, r, c), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((c, c), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
+        interpret=interpret,
+    )(_blk(codes2.astype(jnp.uint32), nb, r, c),
+      _blk(ref2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
+      hr, hc, _gamma_rows(gammas, m))
+    return out.reshape(m, d_pad)

@@ -121,11 +121,16 @@ def _parse(text: str) -> Dict[str, Comp]:
                        if False else rhs[len(shapes_seg):])
         operand_names: List[str] = []
         if pm:
-            for tok in pm.group(1).split(","):
-                tok = tok.strip()
-                tm = re.match(r"%?([\w\.\-]+)$", tok)
-                if tm:
-                    operand_names.append(tm.group(1))
+            # post-optimization HLO references operands as '%name'; find them
+            # directly — splitting on commas breaks inside layout annotations
+            # like 'f32[8,64]{1,0}'.
+            operand_names = re.findall(r"%([\w\.\-]+)", pm.group(1))
+            if not operand_names:
+                for tok in pm.group(1).split(","):
+                    tok = tok.strip()
+                    tm = re.match(r"%?([\w\.\-]+)$", tok)
+                    if tm:
+                        operand_names.append(tm.group(1))
         op_bytes = 0.0
         for nm in operand_names:
             for d, dims in symtab.get(nm, []):

@@ -7,22 +7,20 @@ import; smoke tests and benchmarks see the single real CPU device.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+import jax  # noqa: F401  (device state touched lazily)
+
+from repro.utils.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pods: int = 0):
     """Small mesh over however many (host) devices exist — used by the
     sharding unit tests with --xla_force_host_platform_device_count=8."""
     if pods:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pods, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -105,7 +105,8 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
     n_slots = n_slots_for(mesh, fed_mode)
     rules = rules_for_mode(fed_mode)
     K, lr = fed.local_steps, fed.lr
-    quant = make_quantizer(fed.quantizer if quantized else "none", fed.bits)
+    quant = make_quantizer(fed.quantizer if quantized else "none", fed.bits,
+                           getattr(fed, "kernel_backend", "jnp"))
 
     lam = client_speeds(fed, n_slots) if n_slots > 1 else np.array(
         [fed.lam_fast], np.float32)

@@ -16,8 +16,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
-
 from repro.checkpoint import save_checkpoint
 from repro.configs import SHAPES, get_config, get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
@@ -52,9 +50,8 @@ def main():
                     bits=args.bits, quantizer=args.quantizer,
                     transport=args.transport)
     shape = ShapeConfig("cli", args.seq, args.batch * args.n_slots, "train")
-    mesh = jax.make_mesh(
-        (args.mesh_data, args.mesh_model), ("data", "model"),
-        axis_types=(AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((args.mesh_data, args.mesh_model), ("data", "model"))
 
     key = jax.random.PRNGKey(args.seed)
     with mesh:

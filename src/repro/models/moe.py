@@ -121,7 +121,8 @@ def _moe_ragged_shmap(cfg, p, x, weights, idx, pre):
         return jax.lax.psum(yl, "model")
 
     tok_spec = P("data", None) if mesh.shape.get("data", 1) > 1 else P()
-    fn = jax.shard_map(
+    from repro.utils.compat import shard_map
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(tok_spec, P("data", None) if tok_spec != P() else P(),
                   P("data", None) if tok_spec != P() else P(),

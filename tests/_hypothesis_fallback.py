@@ -1,0 +1,92 @@
+"""Tiny deterministic stand-in for ``hypothesis`` (property-test shim).
+
+The seed container has no ``hypothesis`` wheel and nothing may be pip
+installed, so the property tests fall back to this shim: ``@given`` draws a
+fixed number of pseudo-random examples per strategy from a deterministic
+numpy generator (seeded per test name) and runs the test body once per
+example. Boundary values are always included for integer ranges, which is
+where the real failures live (padding edges, block boundaries).
+
+Only the strategy surface the test-suite uses is implemented: ``integers``,
+``floats``, ``sampled_from``. When the real ``hypothesis`` is available the
+tests import it instead — this module is behaviour-compatible for our usage,
+not a general replacement.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundary=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            boundary=(min_value,))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                         boundary=seq[:1])
+
+
+st = strategies
+
+
+def settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the strategy parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            # crc32, not hash(): str hashing is salted per process and
+            # would make "deterministic" examples unreproducible
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            names = sorted(strategy_kwargs)
+            # boundary example first (min of every strategy), then random
+            cases = [{k: strategy_kwargs[k].boundary[0]
+                      for k in names
+                      if strategy_kwargs[k].boundary}]
+            if len(cases[0]) != len(names):
+                cases = []
+            while len(cases) < max(n, 1):
+                cases.append({k: strategy_kwargs[k].draw(rng)
+                              for k in names})
+            for case in cases:
+                try:
+                    fn(**case)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example {case!r}: {e}") from e
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco

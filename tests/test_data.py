@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seed container has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data import (gaussian_mixture, lm_token_stream,
                         make_federated_classification, partition_by_class,

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
@@ -17,8 +17,8 @@ from repro.sharding.rules import RULES_TP, RULES_FSDP, pspec_for
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_pspec_divisibility_fallback():
@@ -111,14 +111,13 @@ SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
 from repro.launch.steps import build_train_step, build_serve_step, \
     init_train_state
 from repro.launch.specs import input_specs, abstract_cache
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.utils.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_reduced("llama3.2-1b").replace(n_heads=8, n_kv_heads=2)
 fed = FedConfig(local_steps=2, lr=0.05, bits=8)
 shape = ShapeConfig("tiny", 16, 8, "train")

@@ -5,11 +5,13 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.exchange import (fused_decode, fused_encode, fused_rotate,
+                                    snap_codes)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hadamard import hadamard_blocks
 from repro.kernels.lattice_quant import lattice_decode, lattice_encode
 from repro.kernels.ops import rotate_pallas
-from repro.compression.rotation import rotate
+from repro.compression.rotation import _signs, pad_len, rotate
 
 
 @pytest.mark.parametrize("n,r,c", [(1, 128, 128), (3, 128, 128),
@@ -58,6 +60,90 @@ def test_lattice_kernels_match_ref(d, bits):
                                atol=1e-6)
     # end-to-end: reconstruction within γ per coordinate
     assert float(jnp.max(jnp.abs(out - y))) <= gamma * 1.001
+
+
+# ---------------------------------------------------------------------------
+# fused exchange kernels (batched) vs per-message oracles
+# d values include non-multiples of the 16384 rotation block (padding edges)
+# ---------------------------------------------------------------------------
+
+def _oracle_rows(d, s, key):
+    """(s, d) messages + shared signs/noise/per-row gammas + oracle rotate."""
+    d_pad = pad_len(d)
+    krot = jax.random.fold_in(key, 0)
+    signs = _signs(krot, d_pad)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (s, d)) * 2.0
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (s, d_pad))
+    gammas = 0.01 * (1.0 + jnp.arange(s, dtype=jnp.float32))
+    y_rows = jnp.stack([rotate(x[i], krot) for i in range(s)])
+    return x, u, gammas, signs, krot, y_rows
+
+
+@pytest.mark.parametrize("d,s,bits", [(1000, 3, 4), (5000, 4, 8),
+                                      (20000, 2, 16), (16384, 5, 8)])
+def test_fused_encode_matches_vmapped_oracle(d, s, bits):
+    key = jax.random.PRNGKey(10)
+    x, u, gammas, signs, krot, y_rows = _oracle_rows(d, s, key)
+    d_pad = pad_len(d)
+    x_pad = jnp.pad(x, ((0, 0), (0, d_pad - d)))
+    y_rot, codes = fused_encode(x_pad, signs, u, gammas, bits=bits,
+                                want_rotated=True)
+    codes_ref = jnp.stack([
+        ref.lattice_encode_ref(y_rows[i], u[i], gammas[i], bits)
+        for i in range(s)])
+    np.testing.assert_allclose(np.asarray(y_rot), np.asarray(y_rows),
+                               atol=1e-4)
+    assert float(jnp.mean((codes == codes_ref).astype(jnp.float32))) == 1.0
+
+
+@pytest.mark.parametrize("d,s,bits", [(1000, 3, 4), (5000, 4, 8),
+                                      (20000, 2, 16)])
+def test_snap_codes_matches_vmapped_oracle(d, s, bits):
+    key = jax.random.PRNGKey(11)
+    x, u, gammas, signs, krot, y_rows = _oracle_rows(d, s, key)
+    codes = jnp.stack([ref.lattice_encode_ref(y_rows[i], u[i], gammas[i],
+                                              bits) for i in range(s)])
+    w = y_rows[0:1] + 0.001   # shared rotated reference, broadcast over s
+    out = snap_codes(codes, w, gammas, bits=bits)
+    exp = jnp.stack([ref.lattice_decode_ref(codes[i], w[0], gammas[i], bits)
+                     for i in range(s)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+@pytest.mark.parametrize("d,s,bits", [(1000, 3, 4), (5000, 4, 8),
+                                      (20000, 2, 16)])
+def test_fused_decode_matches_composed_oracle(d, s, bits):
+    """One broadcast message decoded against s references == per-row
+    rotate-ref / snap / inverse-rotate composition."""
+    key = jax.random.PRNGKey(12)
+    x, u, gammas, signs, krot, y_rows = _oracle_rows(d, s, key)
+    d_pad = pad_len(d)
+    gamma = gammas[0:1]
+    codes = ref.lattice_encode_ref(y_rows[0], u[0], gamma[0], bits)[None]
+    refs = x[0][None] + 0.002 * jax.random.normal(
+        jax.random.fold_in(key, 3), (s, d))
+    refs_pad = jnp.pad(refs, ((0, 0), (0, d_pad - d)))
+    out = fused_decode(codes, refs_pad, signs, gamma, bits=bits)[:, :d]
+    exp = jnp.stack([
+        rotate(ref.lattice_decode_ref(codes[0], rotate(refs[i], krot),
+                                      gamma[0], bits),
+               krot, inverse=True)[:d]
+        for i in range(s)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_fused_rotate_roundtrip_batched():
+    d, s = 50_000, 3
+    key = jax.random.PRNGKey(13)
+    signs = _signs(key, pad_len(d))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (s, d))
+    x_pad = jnp.pad(x, ((0, 0), (0, pad_len(d) - d)))
+    y = fused_rotate(x_pad, signs)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack([rotate(x[i], key) for i in range(s)])),
+        np.asarray(y), atol=1e-4)
+    back = fused_rotate(y, signs, inverse=True)[:, :d]
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
 
 
 @pytest.mark.parametrize(

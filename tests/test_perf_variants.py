@@ -15,12 +15,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_reduced
 from repro.models.model import init_lm, forward
 from repro.models import moe as moe_mod
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.utils.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_reduced("llama4-scout-17b-a16e").replace(
     d_ff=256, vocab_size=512)
 key = jax.random.PRNGKey(0)
@@ -42,12 +41,11 @@ SUBPROC_EXCHANGE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
 from repro.launch.steps import build_train_step, init_train_state
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.utils.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_reduced("llama3.2-1b").replace(n_heads=8, n_kv_heads=2)
 fed = FedConfig(local_steps=2, lr=0.05, bits=8)
 shape = ShapeConfig("tiny", 16, 8, "train")
