@@ -1,0 +1,51 @@
+"""Every registered server algorithm under ONE clock (the paper's §5 /
+App. A comparison as a benchmark): the full registry runs through
+``compare()`` at an equal simulated-wall-clock budget on the shared non-iid
+classification task, and each algorithm's accuracy / bits / rounds land in
+``BENCH_algorithms.json`` so future PRs can diff the whole family at once.
+"""
+import jax
+
+from repro.configs.base import FedConfig
+from repro.fed import compare, make_algorithm, registered_algorithms
+from repro.models.mlp import mlp_loss
+from benchmarks.common import batch_fn, emit, emit_curve, setup
+
+# per-algorithm construction kwargs (everything else is protocol-uniform)
+_KWARGS = {
+    "fedbuff": {"buffer_size": 4, "server_lr": 0.7, "quantize": True},
+}
+
+
+def main(rounds: int = 100):
+    fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=10,
+                    swt=10.0)
+    part, test, params0 = setup(fed, iid=False)
+    budget = rounds * (fed.swt + fed.sit)   # QuAFL-rounds' worth of sim time
+
+    algs = {name: make_algorithm(name, fed, loss_fn=mlp_loss,
+                                 template=params0, batch_fn=batch_fn,
+                                 **_KWARGS.get(name, {}))
+            for name in registered_algorithms()}
+    def eval_fn(p):
+        loss, metr = mlp_loss(p, test)
+        return {"loss": float(loss), "acc": float(metr["acc"])}
+
+    traces = compare(algs, params0, part, jax.random.PRNGKey(7),
+                     until_sim_time=budget,
+                     eval_every=max(rounds // 6, 1), eval_fn=eval_fn)
+
+    for name, tr in traces.items():
+        f = tr.final
+        emit(f"alg_{name}", tr.us_per_round,
+             f"acc={f['acc']:.3f};loss={f['loss']:.3f};"
+             f"sim_t={f['sim_time']:.0f};rounds={tr.rounds};"
+             f"bits_up={f['bits_up_total']:.3g};"
+             f"bits_down={f['bits_down_total']:.3g}")
+        emit_curve(f"alg_{name}", [
+            (r["round"], r["sim_time"], r["loss"], r["acc"],
+             r["bits_up_total"] + r["bits_down_total"]) for r in tr.rows])
+
+
+if __name__ == "__main__":
+    main()

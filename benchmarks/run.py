@@ -2,21 +2,23 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]``
 prints ``name,us_per_call,derived`` CSV (+ ``# curve:`` blocks carrying the
-convergence data each paper figure plots) and writes every emitted row to
-``BENCH_exchange.json`` (machine-readable per-benchmark us + derived
-flops/bytes) so subsequent PRs have a perf trajectory to diff against.
-``--only`` filters benchmarks by name substring (e.g. ``--only exchange``).
+convergence data each paper figure plots) and writes every emitted row to a
+machine-readable JSON baseline so subsequent PRs have a perf trajectory to
+diff against: the ``algorithms`` bench (the whole registry under one clock)
+lands in ``BENCH_algorithms.json``, everything else in
+``BENCH_exchange.json``. ``--only`` filters benchmarks by name substring
+(e.g. ``--only exchange``, ``--only algorithms``).
 """
 import json
 import os
 import sys
 import time
 
-from benchmarks import (bench_averaging, bench_bits, bench_bits_accounting,
-                        bench_exchange, bench_extensions, bench_fedbuff,
-                        bench_kernels, bench_local_steps, bench_peers,
-                        bench_quantizer, bench_roofline, bench_swt,
-                        bench_time)
+from benchmarks import (bench_algorithms, bench_averaging, bench_bits,
+                        bench_bits_accounting, bench_exchange,
+                        bench_extensions, bench_fedbuff, bench_kernels,
+                        bench_local_steps, bench_peers, bench_quantizer,
+                        bench_roofline, bench_swt, bench_time)
 from benchmarks.common import RECORDS
 
 BENCHES = [
@@ -32,11 +34,14 @@ BENCHES = [
     ("ext_scaffold_adaptive", bench_extensions.main),
     ("kernels", bench_kernels.main),
     ("exchange", bench_exchange.main),
+    ("algorithms", bench_algorithms.main),
     ("roofline", bench_roofline.main),
 ]
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_exchange.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_exchange.json")
+# benches whose records get their own baseline file (name -> path)
+JSON_TARGETS = {"algorithms": os.path.join(_ROOT, "BENCH_algorithms.json")}
 
 
 def _arg_value(flag: str):
@@ -47,32 +52,9 @@ def _arg_value(flag: str):
     return None
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    only = _arg_value("--only")
-    print("name,us_per_call,derived")
-    for name, fn in BENCHES:
-        if only and only not in name:
-            continue
-        t0 = time.time()
-        print(f"# === {name} ===")
-        try:
-            if fn.__code__.co_argcount and quick:
-                fn(20)
-            else:
-                fn()
-        except Exception as e:  # keep the harness going
-            print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-    if not RECORDS:
-        print(f"# no records emitted (bad --only filter?); "
-              f"leaving {JSON_PATH} untouched")
-        return
-    # quick-scale numbers are not comparable with the committed baseline —
-    # keep them in a sibling file so the perf trajectory stays clean
-    path = JSON_PATH.replace(".json", ".quick.json") if quick else JSON_PATH
-    # merge by name: a partial run (--only) refreshes its own rows without
-    # clobbering the rest of the committed baseline
+def _write_merged(path: str, records, quick: bool):
+    """Merge records by name into ``path`` — a partial run (--only)
+    refreshes its own rows without clobbering the committed baseline."""
     merged = {}
     if os.path.exists(path):
         try:
@@ -81,11 +63,45 @@ def main() -> None:
                                                                  [])}
         except (ValueError, KeyError):
             merged = {}
-    merged.update({r["name"]: r for r in RECORDS})
+    merged.update({r["name"]: r for r in records})
     with open(path, "w") as f:
         json.dump({"schema": "bench.v1", "quick": quick,
                    "benches": list(merged.values())}, f, indent=2)
-    print(f"# wrote {len(RECORDS)} records ({len(merged)} total) to {path}")
+    print(f"# wrote {len(records)} records ({len(merged)} total) to {path}")
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    only = _arg_value("--only")
+    print("name,us_per_call,derived")
+    by_target = {}   # json path -> records
+    for name, fn in BENCHES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        n_before = len(RECORDS)
+        print(f"# === {name} ===")
+        try:
+            if fn.__code__.co_argcount and quick:
+                fn(20)
+            else:
+                fn()
+        except Exception as e:  # keep the harness going
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
+        target = JSON_TARGETS.get(name, JSON_PATH)
+        by_target.setdefault(target, []).extend(RECORDS[n_before:])
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if not RECORDS:
+        print("# no records emitted (bad --only filter?); leaving JSON "
+              "baselines untouched")
+        return
+    for path, records in by_target.items():
+        if not records:
+            continue
+        # quick-scale numbers are not comparable with the committed
+        # baseline — keep them in a sibling file
+        _write_merged(path.replace(".json", ".quick.json") if quick
+                      else path, records, quick)
 
 
 if __name__ == "__main__":

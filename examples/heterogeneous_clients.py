@@ -1,7 +1,8 @@
 """Client heterogeneity demo (paper §2.1 + Fig. 3): QuAFL with fast/slow
 clients, weighted (η_i = H_min/H_i) vs unweighted dampening, and the
 robustness headline — slow clients sometimes contribute ZERO local steps and
-the algorithm still converges.
+the algorithm still converges. Runs through the unified ``simulate()``
+harness; the zero-progress fraction comes straight off the trace rows.
 
     PYTHONPATH=src python examples/heterogeneous_clients.py
 """
@@ -9,9 +10,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import QuAFL, client_speeds, expected_steps
 from repro.data import make_federated_classification
 from repro.data.synthetic import client_batch
+from repro.fed import client_speeds, expected_steps, make_algorithm, simulate
 from repro.models.mlp import init_mlp_classifier, mlp_loss
 
 
@@ -21,17 +22,16 @@ def run(weighted: bool, swt: float, rounds: int = 120):
     part, test = make_federated_classification(0, fed.n_clients, d=32,
                                                n_classes=10, iid=False)
     params0, _ = init_mlp_classifier(jax.random.PRNGKey(0), 32, 64, 10)
-    alg = QuAFL(fed=fed, loss_fn=mlp_loss, template=params0,
-                batch_fn=lambda d, k: client_batch(k, d, 32))
-    st = alg.init(params0)
-    key = jax.random.PRNGKey(1)
-    zero_frac = []
-    for _ in range(rounds):
-        key, sub = jax.random.split(key)
-        st, m = alg.round(st, part, sub)
-        zero_frac.append(float(m["h_zero_frac"]))
-    _, metr = mlp_loss(alg.eval_params(st), test)
-    return float(metr["acc"]), float(np.mean(zero_frac)), alg
+    alg = make_algorithm("quafl", fed, loss_fn=mlp_loss, template=params0,
+                         batch_fn=lambda d, k: client_batch(k, d, 32))
+    # record_every=1 traces every round's h_zero_frac; the test-set eval
+    # runs ONCE, on the final round (eval_every=0 -> eval only at done)
+    trace = simulate(alg, params0, part, jax.random.PRNGKey(1),
+                     rounds=rounds, eval_every=0, record_every=1,
+                     eval_fn=lambda p: {"acc": float(mlp_loss(p, test)[1]
+                                                     ["acc"])})
+    zero_frac = float(np.mean(trace.column("h_zero_frac")))
+    return trace.final["acc"], zero_frac, alg
 
 
 def main():

@@ -1,15 +1,17 @@
 """QuAFL-SCAFFOLD (beyond-paper, paper §5 future work): controlled averaging
 removes the non-iid client drift that slows vanilla QuAFL — the control
-variates ride the same position-aware quantized exchange.
+variates ride the same position-aware quantized exchange. Both variants come
+out of the algorithm registry and run under ``compare()`` with the same
+seeds and budget.
 
     PYTHONPATH=src python examples/scaffold_noniid.py
 """
 import jax
 
 from repro.configs.base import FedConfig
-from repro.core import QuAFL, QuaflScaffold
 from repro.data import make_federated_classification
 from repro.data.synthetic import client_batch
+from repro.fed import compare, make_algorithm
 from repro.models.mlp import init_mlp_classifier, mlp_loss
 
 
@@ -21,21 +23,19 @@ def main():
     params0, _ = init_mlp_classifier(jax.random.PRNGKey(0), 32, 64, 10)
     bf = lambda d, k: client_batch(k, d, 32)
 
-    vanilla = QuAFL(fed=fed, loss_fn=mlp_loss, template=params0, batch_fn=bf)
-    scaffold = QuaflScaffold(fed=fed, loss_fn=mlp_loss, template=params0,
-                             batch_fn=bf)
-    sv, sc = vanilla.init(params0), scaffold.init(params0)
-    key = jax.random.PRNGKey(1)
+    algs = {name: make_algorithm(name, fed, loss_fn=mlp_loss,
+                                 template=params0, batch_fn=bf)
+            for name in ("quafl", "quafl_scaffold")}
+    traces = compare(algs, params0, part, jax.random.PRNGKey(1),
+                     rounds=80, eval_every=16,
+                     eval_fn=lambda p: {"acc": float(mlp_loss(p, test)[1]
+                                                     ["acc"])})
+
     print("round |  vanilla acc | scaffold acc | ||c||")
-    for r in range(1, 81):
-        key, k1, k2 = jax.random.split(key, 3)
-        sv, _ = vanilla.round(sv, part, k1)
-        sc, m = scaffold.round(sc, part, k2)
-        if r % 16 == 0:
-            _, mv = mlp_loss(vanilla.eval_params(sv), test)
-            _, ms = mlp_loss(scaffold.eval_params(sc), test)
-            print(f"{r:5d} | {float(mv['acc']):12.3f} |"
-                  f" {float(ms['acc']):12.3f} | {float(m['c_norm']):.3f}")
+    rows = zip(traces["quafl"].rows, traces["quafl_scaffold"].rows)
+    for rv, rs in rows:
+        print(f"{rv['round']:5d} | {rv['acc']:12.3f} | {rs['acc']:12.3f} |"
+              f" {rs['c_norm']:.3f}")
     print("\nSCAFFOLD pays 2x the (cheap, quantized) communication for the "
           "drift correction — both messages are b-bit lattice codes.")
 

@@ -26,18 +26,18 @@ because the rotation is orthogonal), so encode/decode/averaging all happen
 in rotated coordinates and only the final server/client states are
 inverse-rotated. Per round with ``s`` sampled clients this costs exactly
 
-  * ``s + 2`` forward rotations  — the s client messages (fused with their
-    encode), the server's rotation (the uplink decode reference), and the
-    server's own fused encode. The last one re-rotates X_t: its γ depends
-    on the decoded uplink, so it cannot fold into the first server pass;
-    at the fused rotate+quantize kernel granularity that costs one extra
-    rotation (an elementwise quantize of the cached ``srv_rot`` would
-    reach s+1 — see ROADMAP open items),
+  * ``s + 1`` forward rotations  — the s client messages (fused with their
+    encode) and the server's rotation (the uplink decode reference). The
+    server's own Enc(X_t) needs no rotation pass: its γ depends on the
+    decoded uplink so it cannot fold into the srv_rot pass, but the cached
+    rotated coords make it a pure elementwise quantize
+    (``Backend.quantize`` — stochastic round + wrap, no Hadamard work),
   * ``s + 1`` inverse rotations — the s new client states + the new server
     state, rotated back only after averaging,
 
-down from the seed composition's ``5s + 1`` full-model rotation passes. A
-trace-time ``RotationStats`` counter audits this invariant in the tests.
+down from the seed composition's ``5s + 1`` full-model rotation passes (and
+the first fused version's ``s + 2`` forward). A trace-time ``RotationStats``
+counter audits this invariant in the tests.
 
 The downlink decode reference is the client's **current** model Y^i (the
 model it holds when the reply arrives) rather than its pre-round state X^i;
@@ -61,7 +61,8 @@ import numpy as np
 from repro.compression.rotation import (DEFAULT_BLOCK, _signs,
                                         hadamard_matrix, pad_len)
 from repro.kernels.exchange import (block_geometry, fused_decode,
-                                    fused_encode, fused_rotate, snap_codes)
+                                    fused_encode, fused_rotate,
+                                    quantize_codes, snap_codes)
 
 BACKENDS = ("jnp", "pallas_interpret", "pallas")
 
@@ -103,11 +104,12 @@ def wrap_gamma(dist_hint, d: int, *, bits: int, block: int = DEFAULT_BLOCK,
 # ---------------------------------------------------------------------------
 
 class Backend(NamedTuple):
-    """The four primitive ops; every op is batched over a message axis."""
+    """The five primitive ops; every op is batched over a message axis."""
     name: str
     rotate: Callable    # (x2, signs, *, block, inverse) -> y2
     encode: Callable    # (x2, signs, u2, gammas, *, bits, block,
                         #  want_rotated) -> codes | (rotated, codes)
+    quantize: Callable  # (y2_rotated, u2, gammas, *, bits, block) -> codes
     snap: Callable      # (codes2, wrot2, gammas, *, bits, block) -> q2
     decode: Callable    # (codes2, ref2, signs, gammas, *, bits, block) -> x2
 
@@ -137,6 +139,12 @@ def _encode_jnp(x2, signs, u2, gammas, *, bits=8, block=DEFAULT_BLOCK,
     return (y, codes) if want_rotated else codes
 
 
+def _quantize_jnp(y2, u2, gammas, *, bits=8, block=DEFAULT_BLOCK):
+    g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
+    return jnp.mod(jnp.floor(y2.astype(jnp.float32) / g + u2),
+                   1 << bits).astype(jnp.uint32)
+
+
 def _snap_jnp(codes2, wrot2, gammas, *, bits=8, block=DEFAULT_BLOCK):
     levels = 1 << bits
     cc = codes2.astype(jnp.float32)
@@ -156,13 +164,15 @@ def _pallas_backend(name: str, interpret: bool) -> Backend:
         name=name,
         rotate=partial(fused_rotate, interpret=interpret),
         encode=partial(fused_encode, interpret=interpret),
+        quantize=partial(quantize_codes, interpret=interpret),
         snap=partial(snap_codes, interpret=interpret),
         decode=partial(fused_decode, interpret=interpret),
     )
 
 
 _REGISTRY = {
-    "jnp": Backend("jnp", _rotate_jnp, _encode_jnp, _snap_jnp, _decode_jnp),
+    "jnp": Backend("jnp", _rotate_jnp, _encode_jnp, _quantize_jnp, _snap_jnp,
+                   _decode_jnp),
     "pallas_interpret": _pallas_backend("pallas_interpret", interpret=True),
     "pallas": _pallas_backend("pallas", interpret=False),
 }
@@ -237,6 +247,12 @@ class ExchangePipeline:
                                bits=self.bits, block=self.block,
                                want_rotated=want_rotated)
 
+    def quantize(self, y2_rot, u2, gammas):
+        """Elementwise encode of ALREADY-ROTATED coords — no rotation pass
+        (and no ``stats.fwd`` increment): stochastic round + wrap only."""
+        return self.ops.quantize(y2_rot, u2, gammas, bits=self.bits,
+                                 block=self.block)
+
     def snap(self, codes2, wrot2, gammas):
         return self.ops.snap(codes2, wrot2, gammas, bits=self.bits,
                              block=self.block)
@@ -288,12 +304,13 @@ class ExchangePipeline:
         QY_rot = self.snap(codes_up, srv_rot, gam_up)          # (s, d_pad)
 
         # downlink: the server's γ depends on the decoded uplink, so its
-        # encode cannot fold into the srv_rot pass above — it is a second
-        # fused rotate+quantize pass over X_t (the budgeted "+2").
+        # encode cannot fold into the srv_rot pass above — but rot(X_t) is
+        # already cached in ``srv_rot``, so Enc(X_t) is a pure elementwise
+        # quantize of the cached coords (no second rotation pass; the round
+        # budget is s+1 forward rotations, down from s+2).
         hint_srv = jnp.max(jnp.linalg.norm(QY_rot - srv_rot, axis=1)) + 1e-8
         gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None], d)
-        codes_dn = self.rotate_encode(server[None], signs, u_srv, gam_dn,
-                                      want_rotated=False)
+        codes_dn = self.quantize(srv_rot, u_srv, gam_dn)
         QX_rot = self.snap(codes_dn, Y_rot, gam_dn)            # (s, d_pad)
 
         # (s+1)-averaging in rotated coordinates; inverse-rotate only the

@@ -1,7 +1,11 @@
 """The paper's primary contribution: QuAFL (Alg. 1) plus the baselines it is
-compared against (FedAvg, FedBuff, sequential)."""
+compared against (FedAvg, FedBuff, sequential) and the beyond-paper
+extensions. Every class implements the :class:`repro.fed.FedAlgorithm`
+protocol; prefer selecting by name via ``repro.fed.make_algorithm``."""
 from repro.core.quafl import QuAFL, QuaflState, client_speeds, expected_steps  # noqa: F401
 from repro.core.fedavg import FedAvg, FedAvgState  # noqa: F401
-from repro.core.fedbuff import FedBuff  # noqa: F401
-from repro.core.baseline import Sequential  # noqa: F401
-from repro.core.extensions import AdaptiveBits, AdaptiveQuAFL, QuaflScaffold  # noqa: F401
+from repro.core.fedbuff import FedBuff, FedBuffState  # noqa: F401
+from repro.core.baseline import BaselineState, Sequential  # noqa: F401
+from repro.core.extensions import (AdaptiveBits, AdaptiveQuAFL,  # noqa: F401
+                                   AdaptiveQuaflAlgorithm, AdaptiveState,
+                                   QuaflScaffold, ScaffoldState)

@@ -1,5 +1,10 @@
 """Sequential baseline (paper Fig. 3/10): a single (slow) node performing one
-optimization step per round, acting as both client and server."""
+optimization step per round, acting as both client and server.
+
+Implements the :class:`repro.fed.FedAlgorithm` protocol; registry name
+``"sequential"``. There is no communication, so both bit counters stay 0 —
+the fields exist so the unified metrics schema holds for every algorithm.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -17,6 +22,12 @@ class BaselineState(NamedTuple):
     server: jnp.ndarray
     t: jnp.ndarray
     sim_time: jnp.ndarray
+    bits_up: jnp.ndarray
+    bits_down: jnp.ndarray
+
+    @property
+    def bits_sent(self):
+        return self.bits_up + self.bits_down
 
 
 @dataclass(eq=False)
@@ -29,7 +40,8 @@ class Sequential:
     def init(self, params0):
         return BaselineState(server=tree_flatten_vector(params0),
                              t=jnp.zeros((), jnp.int32),
-                             sim_time=jnp.zeros(()))
+                             sim_time=jnp.zeros(()), bits_up=jnp.zeros(()),
+                             bits_down=jnp.zeros(()))
 
     @partial(jax.jit, static_argnums=0)
     def round(self, state, data, key):
@@ -42,9 +54,18 @@ class Sequential:
         g = jax.grad(f)(state.server, self.batch_fn(data0, k_b))
         # a single SLOW node: Exp(λ_slow) step duration
         dt = jax.random.exponential(k_t) / self.fed.lam_slow
+        new_time = state.sim_time + dt
+        metrics = {
+            "sim_time": new_time,
+            "round_time": dt,
+            "bits_up": jnp.zeros(()), "bits_down": jnp.zeros(()),
+            "h_steps_mean": jnp.ones(()),   # one step per round, by design
+            "quant_err": jnp.zeros(()),
+        }
         return BaselineState(server=state.server - self.fed.lr * g,
-                             t=state.t + 1,
-                             sim_time=state.sim_time + dt), {}
+                             t=state.t + 1, sim_time=new_time,
+                             bits_up=state.bits_up,
+                             bits_down=state.bits_down), metrics
 
     def eval_params(self, state):
         return tree_unflatten_vector(self.template, state.server)

@@ -14,26 +14,35 @@
    rounds to keep it inside a target band. Works with the lattice quantizer
    because γ already adapts to the model distance — bits only control the
    wrap-window safety margin.
+
+Both implement the :class:`repro.fed.FedAlgorithm` protocol — registry names
+``"quafl_scaffold"`` and ``"adaptive_quafl"`` — so they run through the same
+``simulate()`` harness and metrics schema as every paper algorithm. The
+legacy ``AdaptiveQuAFL`` wrapper (internally-held state, ``round(data,
+key)``) remains as a thin shim over the protocol implementation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.compression.lattice import make_quantizer
 from repro.configs.base import FedConfig
 from repro.core.quafl import QuAFL, QuaflState
+from repro.fed.clock import lazy_h_steps, sample_clients
 
 
 class ScaffoldState(NamedTuple):
     base: QuaflState
     c_server: jnp.ndarray      # server control variate (d,)
     c_clients: jnp.ndarray     # per-client control variates (n, d)
+
+    @property
+    def bits_sent(self):
+        return self.base.bits_sent
 
 
 @dataclass(eq=False)
@@ -68,11 +77,10 @@ class QuaflScaffold(QuAFL):
         n, s = fed.n_clients, fed.s
         base = state.base
         k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
-        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        idx = sample_clients(k_sel, n, s)
         elapsed = base.sim_time + fed.swt + fed.sit - base.last_time[idx]
-        lam = jnp.asarray(self.lam)[idx]
-        h_steps = jnp.minimum(jax.random.poisson(k_h, lam * elapsed),
-                              fed.local_steps).astype(jnp.int32)
+        h_steps = lazy_h_steps(k_h, jnp.asarray(self.lam)[idx], elapsed,
+                               fed.local_steps)
 
         cl = base.clients[idx]
         c_i = state.c_clients[idx]
@@ -115,18 +123,31 @@ class QuaflScaffold(QuAFL):
         QX = jax.vmap(lambda r: self.quant.decode(kq_srv, msg, r))(cl)
         cl_new = QX / (s + 1) + s * Y / (s + 1)
 
-        new_time = base.sim_time + fed.swt + fed.sit
+        # 2 lattice messages per sampled client up (model + control), 2 down
+        # (the broadcast Enc(X_t) + the control broadcast)
+        mb = self.quant.message_bits(self.d)
+        bits_up, bits_down = 2 * s * mb, 2 * mb
+        dt = fed.swt + fed.sit
+        new_time = base.sim_time + dt
         nbase = QuaflState(
             server=server_new, clients=base.clients.at[idx].set(cl_new),
             t=base.t + 1, sim_time=new_time,
             last_time=base.last_time.at[idx].set(new_time),
-            bits_sent=base.bits_sent
-            + 2 * (s + 1) * self.quant.message_bits(self.d),
+            bits_up=base.bits_up + bits_up,
+            bits_down=base.bits_down + bits_down,
             srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv)
         new_state = ScaffoldState(
             base=nbase, c_server=c_server_new,
             c_clients=state.c_clients.at[idx].set(QC))
-        metrics = {"h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
+        rel_err = jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
+                           / (jnp.linalg.norm(Y, axis=1) + 1e-9))
+        metrics = {"sim_time": new_time,
+                   "round_time": jnp.asarray(dt, jnp.float32),
+                   "bits_up": jnp.asarray(bits_up, jnp.float32),
+                   "bits_down": jnp.asarray(bits_down, jnp.float32),
+                   "h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
+                   "h_zero_frac": jnp.mean((h_steps == 0).astype(jnp.float32)),
+                   "quant_err": rel_err,
                    "c_norm": jnp.linalg.norm(c_server_new)}
         return new_state, metrics
 
@@ -149,26 +170,61 @@ class AdaptiveBits:
     b_min: int = 4
     b_max: int = 16
 
+    @staticmethod
+    def walk(bits: int, rel_err: float, lo: float, hi: float,
+             b_min: int, b_max: int) -> int:
+        """Pure controller step — the stateless core shared with the
+        protocol implementation. The result always stays in [b_min, b_max]
+        for in-range inputs."""
+        if rel_err > hi and bits < b_max:
+            return bits + 1
+        if rel_err < lo and bits > b_min:
+            return bits - 1
+        return bits
+
     def update(self, rel_err: float) -> int:
-        if rel_err > self.hi and self.bits < self.b_max:
-            self.bits += 1
-        elif rel_err < self.lo and self.bits > self.b_min:
-            self.bits -= 1
+        self.bits = self.walk(self.bits, rel_err, self.lo, self.hi,
+                              self.b_min, self.b_max)
         return self.bits
 
 
-class AdaptiveQuAFL:
-    """Composition wrapper: a QuAFL instance per active bit-width (jit cache
-    friendly — at most b_max − b_min compilations)."""
+_TRACE_CAP = 4096   # bounds the per-round tuple copy; full history is in
+                    # the per-round "bits_width" metric every round emits
 
-    def __init__(self, fed: FedConfig, make_alg, params0):
+
+@dataclass
+class AdaptiveState:
+    """Protocol state: the wrapped QuAFL state + the python-int bit-width
+    (it selects the jit cache, so it cannot live on-device) + the visited
+    bit-width trace (immutable so forked states stay independent; capped at
+    the last ``_TRACE_CAP`` entries to keep the per-round copy bounded)."""
+    inner: QuaflState
+    bits: int
+    trace: Tuple[int, ...] = ()
+
+    @property
+    def sim_time(self):
+        return self.inner.sim_time
+
+    @property
+    def bits_sent(self):
+        return self.inner.bits_sent
+
+
+class AdaptiveQuaflAlgorithm:
+    """Adaptive bit-width QuAFL as a :class:`repro.fed.FedAlgorithm`.
+
+    Composition over a QuAFL factory: one QuAFL instance per active
+    bit-width (jit cache friendly — at most b_max − b_min compilations).
+    The bit walk reacts to the measured ``quant_err`` of the previous round.
+    """
+
+    def __init__(self, fed: FedConfig, make_alg, *, lo: float = 0.01,
+                 hi: float = 0.05, b_min: int = 4, b_max: int = 16):
         self.fed = fed
         self.make_alg = make_alg
-        self.ctrl = AdaptiveBits(bits=fed.bits)
+        self.lo, self.hi, self.b_min, self.b_max = lo, hi, b_min, b_max
         self._algs = {}
-        self.params0 = params0
-        self.state = self._alg(fed.bits).init(params0)
-        self.bits_trace = []
 
     def _alg(self, bits: int):
         if bits not in self._algs:
@@ -177,13 +233,43 @@ class AdaptiveQuAFL:
                 dataclasses.replace(self.fed, bits=bits))
         return self._algs[bits]
 
-    def round(self, data, key):
-        alg = self._alg(self.ctrl.bits)
-        self.state, m = alg.round(self.state, data, key)
+    def init(self, params0) -> AdaptiveState:
+        return AdaptiveState(inner=self._alg(self.fed.bits).init(params0),
+                             bits=self.fed.bits)
+
+    def round(self, state: AdaptiveState, data, key):
+        alg = self._alg(state.bits)
+        inner, m = alg.round(state.inner, data, key)
         rel = float(m["quant_err"]) if "quant_err" in m else 0.02
-        self.bits_trace.append(self.ctrl.bits)
-        self.ctrl.update(rel)
+        new_bits = AdaptiveBits.walk(state.bits, rel, self.lo, self.hi,
+                                     self.b_min, self.b_max)
+        metrics = {**m, "bits_width": float(state.bits)}
+        return AdaptiveState(
+            inner=inner, bits=new_bits,
+            trace=(state.trace + (state.bits,))[-_TRACE_CAP:]), metrics
+
+    def eval_params(self, state: AdaptiveState):
+        return self._alg(state.bits).eval_params(state.inner)
+
+
+class AdaptiveQuAFL:
+    """Legacy wrapper (internally-held state): thin shim over
+    :class:`AdaptiveQuaflAlgorithm` preserving the original interface."""
+
+    def __init__(self, fed: FedConfig, make_alg, params0):
+        self.fed = fed
+        self.make_alg = make_alg
+        self.params0 = params0
+        self._impl = AdaptiveQuaflAlgorithm(fed, make_alg)
+        self.state = self._impl.init(params0)
+
+    @property
+    def bits_trace(self):
+        return list(self.state.trace)
+
+    def round(self, data, key):
+        self.state, m = self._impl.round(self.state, data, key)
         return m
 
     def eval_params(self):
-        return self._alg(self.ctrl.bits).eval_params(self.state)
+        return self._impl.eval_params(self.state)

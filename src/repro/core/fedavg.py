@@ -3,7 +3,12 @@
 Each round the server sends its (uncompressed) model to s random clients;
 each performs EXACTLY K local steps and returns the result; the server
 averages. The server must wait for the SLOWEST sampled client: simulated
-round time = max_i Gamma(K, λ_i) + sit (swt = 0 in FedAvg).
+round time = max_i Gamma(K, λ_i) + sit (swt = 0 in FedAvg). The speed model
+and the straggler draw come from ``repro.fed.clock`` — the same clock every
+algorithm in the comparison runs under.
+
+Implements the :class:`repro.fed.FedAlgorithm` protocol; registry name
+``"fedavg"``.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core.quafl import client_speeds
+from repro.fed.clock import sample_clients, speeds_for, straggler_round_time
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
 
 
@@ -24,7 +29,13 @@ class FedAvgState(NamedTuple):
     server: jnp.ndarray
     t: jnp.ndarray
     sim_time: jnp.ndarray
-    bits_sent: jnp.ndarray
+    bits_up: jnp.ndarray
+    bits_down: jnp.ndarray
+
+    @property
+    def bits_sent(self):
+        """Total communication bits, both directions (legacy accessor)."""
+        return self.bits_up + self.bits_down
 
 
 @dataclass(eq=False)
@@ -37,15 +48,15 @@ class FedAvg:
 
     def __post_init__(self):
         n = self.fed.n_clients
-        self.lam = (np.full(n, self.fed.lam_fast, np.float32)
-                    if self.uniform_speeds else client_speeds(self.fed, n))
+        self.lam = speeds_for(self.fed, n, uniform=self.uniform_speeds)
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
 
     def init(self, params0) -> FedAvgState:
         return FedAvgState(server=tree_flatten_vector(params0),
                            t=jnp.zeros((), jnp.int32),
-                           sim_time=jnp.zeros(()), bits_sent=jnp.zeros(()))
+                           sim_time=jnp.zeros(()), bits_up=jnp.zeros(()),
+                           bits_down=jnp.zeros(()))
 
     def _grad(self, flat, batch):
         def f(v):
@@ -59,7 +70,7 @@ class FedAvg:
         fed = self.fed
         n, s, K = fed.n_clients, fed.s, fed.local_steps
         k_sel, k_loc, k_t = jax.random.split(key, 3)
-        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        idx = sample_clients(k_sel, n, s)
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
 
@@ -74,14 +85,21 @@ class FedAvg:
         models = jax.vmap(local)(data_s, keys)
         server_new = jnp.mean(models, 0)
         # slowest sampled client: sum of K Exp(λ) step times
-        lam = jnp.asarray(self.lam)[idx]
-        steps = jax.random.gamma(k_t, K * jnp.ones((s,))) / lam
-        dt = jnp.max(steps) + fed.sit
-        bits = (2 * s) * self.d * 32  # uncompressed both ways
+        dt = straggler_round_time(k_t, jnp.asarray(self.lam)[idx], K, fed.sit)
+        bits_up = bits_down = s * self.d * 32  # uncompressed both ways
+        metrics = {
+            "sim_time": state.sim_time + dt,
+            "round_time": dt,
+            "bits_up": jnp.asarray(bits_up, jnp.float32),
+            "bits_down": jnp.asarray(bits_down, jnp.float32),
+            "h_steps_mean": jnp.asarray(K, jnp.float32),  # exactly K, always
+            "quant_err": jnp.zeros(()),                   # uncompressed
+            "bits": jnp.asarray(bits_up + bits_down, jnp.float32),
+        }
         return FedAvgState(server=server_new, t=state.t + 1,
                            sim_time=state.sim_time + dt,
-                           bits_sent=state.bits_sent + bits), {
-            "round_time": dt, "bits": jnp.asarray(bits, jnp.float32)}
+                           bits_up=state.bits_up + bits_up,
+                           bits_down=state.bits_down + bits_down), metrics
 
     def eval_params(self, state):
         return tree_unflatten_vector(self.template, state.server)

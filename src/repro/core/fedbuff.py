@@ -13,14 +13,27 @@ the averaged delta. The deltas can be quantized (``quantize=True``) with:
     same fused rotate+quantize pipeline as QuAFL (backend selected by
     ``FedConfig.kernel_backend``). Beyond-paper option.
 
-Event-driven python loop around a jitted local-steps function (FedBuff's
-control flow is data-dependent, so it is simulated rather than SPMD)."""
+FedBuff's control flow is data-dependent, so it is simulated (event-driven
+python around a jitted local-steps function) rather than SPMD. The event
+machinery — ``Gamma(K, λ)`` completion times feeding a min-heap of arrivals —
+lives in ``repro.fed.clock`` (the same clock every baseline runs under).
+
+The class implements the :class:`repro.fed.FedAlgorithm` protocol: ``round``
+advances the event simulation until ONE buffer flush (one server update) and
+returns the standardized metrics. The state is a python-side record (not a
+jax pytree) — rounds are deterministic given ``init`` plus the FIRST round
+key, which seeds the event rng exactly like the legacy ``run`` entry point;
+later round keys are ignored. ``run`` is a thin wrapper over the same
+single-completion step: the event order, rng stream, and model iterates are
+identical to the legacy loop. The history's bits column now counts BOTH
+directions (each restart downloads the fp32 server model, d·32 bits, on top
+of the uplink delta) — the legacy loop counted the uplink only.
+"""
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from functools import partial
-from typing import Any, Callable, List
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +41,34 @@ import numpy as np
 
 from repro.compression.lattice import make_quantizer
 from repro.configs.base import FedConfig
-from repro.core.quafl import client_speeds
+from repro.fed.clock import ArrivalQueue, completion_time, speeds_for
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
+
+
+def _copy_rng(rng: np.random.Generator) -> np.random.Generator:
+    new = np.random.default_rng()
+    new.bit_generator.state = rng.bit_generator.state
+    return new
+
+
+@dataclass
+class FedBuffState:
+    """Event-driven simulation state (python-side; NOT a jax pytree)."""
+    server: jnp.ndarray
+    start_model: List[jnp.ndarray]      # model each client started from
+    queue: Optional[ArrivalQueue]       # pending completion events
+    buffer: List[jnp.ndarray]           # deltas awaiting the next flush
+    sim_time: float = 0.0
+    t: int = 0                          # server updates applied
+    bits_up: float = 0.0
+    bits_down: float = 0.0
+    rng: Optional[np.random.Generator] = None   # seeded on first round
+    jkey: Optional[jax.Array] = None
+
+    @property
+    def bits_sent(self):
+        """Total communication bits, both directions (legacy accessor)."""
+        return self.bits_up + self.bits_down
 
 
 @dataclass(eq=False)
@@ -46,8 +85,7 @@ class FedBuff:
 
     def __post_init__(self):
         n = self.fed.n_clients
-        self.lam = (np.full(n, self.fed.lam_fast, np.float32)
-                    if self.uniform_speeds else client_speeds(self.fed, n))
+        self.lam = speeds_for(self.fed, n, uniform=self.uniform_speeds)
         self.quant = make_quantizer(self.quantizer if self.quantize
                                     else "none", self.fed.bits,
                                     getattr(self.fed, "kernel_backend",
@@ -73,53 +111,126 @@ class FedBuff:
 
         self._local = _local
 
-    def run(self, params0, data, key, total_time: float, eval_every: float,
-            eval_fn):
-        """Simulate until ``total_time``; returns list of (time, metrics)."""
+    # ------------------------------------------------------------------
+    # FedAlgorithm protocol
+    # ------------------------------------------------------------------
+    def init(self, params0) -> FedBuffState:
+        server = tree_flatten_vector(params0)
+        n = self.fed.n_clients
+        return FedBuffState(server=server,
+                            start_model=[server for _ in range(n)],
+                            queue=None, buffer=[])
+
+    def _seed(self, state: FedBuffState, key) -> FedBuffState:
+        """Seed the event rng from a jax key (legacy ``run`` derivation)."""
         rng = np.random.default_rng(
             int(jax.random.randint(key, (), 0, 2**31 - 1)))
-        n, K = self.fed.n_clients, self.fed.local_steps
-        server = tree_flatten_vector(params0)
-        start_model = [server for _ in range(n)]
-        events: List = []
-        for i in range(n):
-            heapq.heappush(events, (rng.gamma(K, 1.0 / self.lam[i]), i))
-        buffer, history, next_eval, bits = [], [], 0.0, 0
-        jkey = key
-        while events:
-            t_now, i = heapq.heappop(events)
+        queue = ArrivalQueue.initial(rng, self.lam, self.fed.local_steps)
+        return replace(state, rng=rng, queue=queue, jkey=key)
+
+    @staticmethod
+    def _fork(state: FedBuffState) -> FedBuffState:
+        """Copy the mutable containers so the caller's state stays usable.
+
+        Called ONCE per protocol ``round`` (not per completion event):
+        ``_completion`` mutates in place, so a round of Z buffered arrivals
+        costs one O(n_clients) copy instead of Z."""
+        return replace(state, queue=state.queue.copy(),
+                       start_model=list(state.start_model),
+                       buffer=list(state.buffer), rng=_copy_rng(state.rng))
+
+    def _completion(self, state: FedBuffState, data, want_metrics=False):
+        """Process ONE client completion event, MUTATING ``state``.
+        With ``want_metrics`` returns the relative quantization error of
+        this delta as a DEVICE scalar (else/uncompressed: None) — the
+        legacy ``run`` path skips the two extra full-model norms entirely,
+        matching the work the original loop did."""
+        t_now, i = state.queue.pop()
+        state.jkey, sub = jax.random.split(state.jkey)
+        delta = self._local(state.start_model[i], jax.tree_util.tree_map(
+            lambda a: a[i], data), sub)
+        rel_err = None
+        if self.quantize:
+            state.jkey, qk = jax.random.split(state.jkey)
+            # lattice path: deltas are position-aware decodable against
+            # the zero vector with hint ‖Δ‖ (one fused encode + decode
+            # pass through the pipeline backend); QSGD ignores both.
+            msg = self.quant.encode(
+                qk, delta, jnp.linalg.norm(delta) + 1e-12)
+            dq = self.quant.decode(qk, msg, jnp.zeros_like(delta))
+            if want_metrics:
+                rel_err = (jnp.linalg.norm(dq - delta)
+                           / (jnp.linalg.norm(delta) + 1e-12))
+            delta = dq
+            state.bits_up += self.quant.message_bits(self.d)
+        else:
+            state.bits_up += self.d * 32
+        state.buffer.append(delta)
+        if len(state.buffer) >= self.buffer_size:
+            # Δ = start − end = η·Σg points downhill: w ← w − η_g·avg(Δ)
+            state.server = state.server - self.server_lr * jnp.mean(
+                jnp.stack(state.buffer), 0)
+            state.buffer = []
+            state.t += 1
+        # client restarts from the current server model: one fp32 downlink
+        state.start_model[i] = state.server
+        state.bits_down += self.d * 32
+        state.sim_time = float(t_now)
+        state.queue.push(t_now + completion_time(
+            state.rng, self.fed.local_steps, self.lam[i]), i)
+        return rel_err
+
+    def round(self, state: FedBuffState, data, key):
+        """Advance the event simulation until ONE buffer flush (one server
+        update). ``key`` seeds the rng on the first call only — the event
+        stream is a single sequence, exactly as in the legacy ``run``. The
+        input state is forked, not mutated."""
+        if state.rng is None:
+            state = self._seed(state, key)
+        state = self._fork(state)
+        t_before, errs = state.t, []
+        time_before, up_before, down_before = (state.sim_time, state.bits_up,
+                                               state.bits_down)
+        while state.t == t_before:
+            rel = self._completion(state, data, want_metrics=True)
+            if rel is not None:
+                errs.append(rel)
+        metrics = {
+            "sim_time": state.sim_time,
+            "round_time": state.sim_time - time_before,
+            "bits_up": state.bits_up - up_before,
+            "bits_down": state.bits_down - down_before,
+            # every buffered arrival carries exactly K completed steps
+            "h_steps_mean": float(self.fed.local_steps),
+            "quant_err": float(jnp.mean(jnp.stack(errs))) if errs else 0.0,
+            "buffer_flushes": 1.0,
+        }
+        return state, metrics
+
+    def eval_params(self, state: FedBuffState):
+        return tree_unflatten_vector(self.template, state.server)
+
+    # ------------------------------------------------------------------
+    # legacy entry point (exact event/eval ordering of the original loop)
+    # ------------------------------------------------------------------
+    def run(self, params0, data, key, total_time: float, eval_every: float,
+            eval_fn):
+        """Simulate until ``total_time``; returns list of (time, metrics,
+        bits). Bit-identical event stream to the protocol ``round`` path —
+        both drive the same single-completion step in the same order."""
+        state = self._seed(self.init(params0), key)
+        history, next_eval = [], 0.0
+        while len(state.queue):
+            t_now, _ = state.queue.peek()
             if t_now > total_time:
                 break
             while t_now >= next_eval:
-                history.append((next_eval, eval_fn(tree_unflatten_vector(
-                    self.template, server)), bits))
+                history.append((next_eval, eval_fn(self.eval_params(state)),
+                                state.bits_sent))
                 next_eval += eval_every
-            jkey, sub = jax.random.split(jkey)
-            delta = self._local(start_model[i], jax.tree_util.tree_map(
-                lambda a: a[i], data), sub)
-            if self.quantize:
-                jkey, qk = jax.random.split(jkey)
-                # lattice path: deltas are position-aware decodable against
-                # the zero vector with hint ‖Δ‖ (one fused encode + decode
-                # pass through the pipeline backend); QSGD ignores both.
-                msg = self.quant.encode(
-                    qk, delta, jnp.linalg.norm(delta) + 1e-12)
-                delta = self.quant.decode(qk, msg, jnp.zeros_like(delta))
-                bits += self.quant.message_bits(self.d)
-            else:
-                bits += self.d * 32
-            buffer.append(delta)
-            if len(buffer) >= self.buffer_size:
-                # Δ = start − end = η·Σg points downhill: w ← w − η_g·avg(Δ)
-                server = server - self.server_lr * jnp.mean(
-                    jnp.stack(buffer), 0)
-                buffer = []
-            # client restarts from the current server model
-            start_model[i] = server
-            heapq.heappush(events,
-                           (t_now + rng.gamma(K, 1.0 / self.lam[i]), i))
+            self._completion(state, data)   # run() owns state: no fork
         while next_eval <= total_time:
-            history.append((next_eval, eval_fn(tree_unflatten_vector(
-                self.template, server)), bits))
+            history.append((next_eval, eval_fn(self.eval_params(state)),
+                            state.bits_sent))
             next_eval += eval_every
         return history

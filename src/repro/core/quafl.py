@@ -13,6 +13,8 @@ Faithfulness notes:
    steps it would have completed since its last interaction — and replays
    exactly that many SGD steps (masked lax.scan). H may be 0: the client is
    polled mid-flight with no progress, and still participates (paper §2.2).
+   The speed model and the lazy draw live in ``repro.fed.clock`` (shared
+   with every baseline so the comparison runs under ONE clock).
  * η_i = H_min/H_i dampening uses the EXPECTED speeds (weighted variant);
    the unweighted variant (paper App. A experiments) sets η_i = 1.
  * Both directions are quantized with the position-aware lattice quantizer.
@@ -26,17 +28,23 @@ Faithfulness notes:
 Perf: with ``quantizer="lattice"`` the whole exchange runs through the
 rotated-space compression pipeline (repro.compression.pipeline): one shared
 per-round rotation key, all encode/decode/averaging in rotated coordinates,
-exactly s+2 forward + s+1 inverse full-model rotations per round (the seed
-composition spent ~5s+1). ``FedConfig.kernel_backend`` selects the
+exactly s+1 forward + s+1 inverse full-model rotations per round (the seed
+composition spent ~5s+1; the downlink Enc(X_t) is an elementwise quantize of
+the cached rotated server). ``FedConfig.kernel_backend`` selects the
 jnp / Pallas-interpret / Pallas implementation of the fused kernels;
 ``exchange_impl="reference"`` keeps the per-message materialize-everything
 oracle for equivalence testing.
+
+This class implements the :class:`repro.fed.FedAlgorithm` protocol
+(``init / round / eval_params``) and emits the standardized metrics schema
+(``sim_time``, ``bits_up``, ``bits_down``, ``h_steps_mean``, ``quant_err``,
+...); select it by name via ``repro.fed.make_algorithm("quafl", ...)``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +53,9 @@ import numpy as np
 from repro.compression.lattice import make_quantizer
 from repro.compression.pipeline import ExchangePipeline
 from repro.configs.base import FedConfig
+# canonical home is repro.fed.clock; re-exported here for compatibility
+from repro.fed.clock import (client_speeds, expected_steps,  # noqa: F401
+                             lazy_h_steps, sample_clients, speeds_for)
 from repro.utils.tree import (tree_flatten_vector, tree_unflatten_vector)
 
 
@@ -54,24 +65,14 @@ class QuaflState(NamedTuple):
     t: jnp.ndarray             # server round
     sim_time: jnp.ndarray      # simulated wall-clock
     last_time: jnp.ndarray     # (n,) last interaction time per client
-    bits_sent: jnp.ndarray     # cumulative communication bits
+    bits_up: jnp.ndarray       # cumulative client->server bits
+    bits_down: jnp.ndarray     # cumulative server->client bits
     srv_dist_est: jnp.ndarray  # running ‖X_t − X^i‖ estimate (server Enc hint)
 
-
-def client_speeds(fed: FedConfig, n: int) -> np.ndarray:
-    """λ per client: first ``slow_frac``·n clients are slow (paper App. A:
-    step time ~ Exp(λ), λ=1/2 fast, λ=1/8 slow, 30% slow)."""
-    lam = np.full(n, fed.lam_fast, dtype=np.float32)
-    n_slow = int(round(fed.slow_frac * n))
-    lam[:n_slow] = fed.lam_slow
-    return lam
-
-
-def expected_steps(fed: FedConfig, lam: np.ndarray) -> np.ndarray:
-    """H_i = E[steps between interactions], capped at K. Between interactions
-    a client has ≈ n/s · (swt+sit) time in expectation."""
-    elapsed = (fed.swt + fed.sit) * max(fed.n_clients / fed.s, 1.0)
-    return np.minimum(fed.local_steps, np.maximum(lam * elapsed, 1e-3))
+    @property
+    def bits_sent(self):
+        """Total communication bits, both directions (legacy accessor)."""
+        return self.bits_up + self.bits_down
 
 
 @dataclass(eq=False)
@@ -97,8 +98,7 @@ class QuAFL:
                                           backend=backend)
                          if self.fed.quantizer == "lattice" else None)
         n = self.fed.n_clients
-        self.lam = (np.full(n, self.fed.lam_fast, np.float32)
-                    if self.uniform_speeds else client_speeds(self.fed, n))
+        self.lam = speeds_for(self.fed, n, uniform=self.uniform_speeds)
         self.H = expected_steps(self.fed, self.lam)
         self.eta_i = ((self.H.min() / self.H) if self.fed.weighted
                       else np.ones(n)).astype(np.float32)
@@ -115,7 +115,8 @@ class QuAFL:
         return QuaflState(
             server=x0, clients=jnp.tile(x0[None], (n, 1)),
             t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
-            last_time=jnp.zeros((n,)), bits_sent=jnp.zeros(()),
+            last_time=jnp.zeros((n,)), bits_up=jnp.zeros(()),
+            bits_down=jnp.zeros(()),
             srv_dist_est=jnp.ones(()) * 1e-3)
 
     # ------------------------------------------------------------------
@@ -148,11 +149,10 @@ class QuAFL:
         n, s = fed.n_clients, fed.s
         k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
 
-        idx = jax.random.choice(k_sel, n, (s,), replace=False)
+        idx = sample_clients(k_sel, n, s)
         elapsed = state.sim_time + fed.swt + fed.sit - state.last_time[idx]
-        lam = self._lam_j[idx]
-        h_steps = jnp.minimum(jax.random.poisson(k_h, lam * elapsed),
-                              fed.local_steps).astype(jnp.int32)
+        h_steps = lazy_h_steps(k_h, self._lam_j[idx], elapsed,
+                               fed.local_steps)
 
         cl = state.clients[idx]                                  # (s, d)
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
@@ -168,7 +168,7 @@ class QuAFL:
 
         if self.pipeline is not None:
             # rotated-space engine: one shared rotation per round, all
-            # encode/decode/averaging in rotated coordinates (s+2 forward,
+            # encode/decode/averaging in rotated coordinates (s+1 forward,
             # s+1 inverse full-model rotations — audited in the tests).
             fn = (self.pipeline.quafl_round
                   if self.exchange_impl == "pipeline"
@@ -210,19 +210,29 @@ class QuAFL:
                                / (jnp.linalg.norm(Y, axis=1) + 1e-9))
         clients_new = state.clients.at[idx].set(cl_new)
 
-        bits = (s + 1) * self.quant.message_bits(self.d)
-        new_time = state.sim_time + fed.swt + fed.sit
+        # bit accounting, split by direction: s uplink messages + ONE
+        # downlink broadcast Enc(X_t) (every sampled client decodes the same
+        # codes against its own model)
+        mb = self.quant.message_bits(self.d)
+        bits_up, bits_down = s * mb, mb
+        dt = fed.swt + fed.sit
+        new_time = state.sim_time + dt
         state = QuaflState(
             server=server_new, clients=clients_new, t=state.t + 1,
             sim_time=new_time,
             last_time=state.last_time.at[idx].set(new_time),
-            bits_sent=state.bits_sent + bits,
+            bits_up=state.bits_up + bits_up,
+            bits_down=state.bits_down + bits_down,
             srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv)
         metrics = {
+            "sim_time": new_time,
+            "round_time": jnp.asarray(dt, jnp.float32),
+            "bits_up": jnp.asarray(bits_up, jnp.float32),
+            "bits_down": jnp.asarray(bits_down, jnp.float32),
             "h_steps_mean": jnp.mean(h_steps.astype(jnp.float32)),
             "h_zero_frac": jnp.mean((h_steps == 0).astype(jnp.float32)),
             "quant_err": rel_err,
-            "bits": jnp.asarray(bits, jnp.float32),
+            "bits": jnp.asarray(bits_up + bits_down, jnp.float32),
         }
         return state, metrics
 

@@ -108,3 +108,24 @@ def make_federated_tokens(seed: int, n_clients: int, batch: int,
                             client_id=(i if noniid else 0))
             for i in range(n_clients)]
     return jnp.stack(outs)
+
+
+def federated_token_task(seed: int, n_clients: int, pool: int, batch: int,
+                         seq_len: int, vocab: int):
+    """An LM task in the shape the FedAlgorithm protocol consumes: a
+    per-client token pool + a minibatch sampler.
+
+    Returns ``(data, batch_fn)`` where ``data`` is
+    ``{"tokens": (n_clients, pool, seq_len)}`` and ``batch_fn(client_data,
+    key)`` draws ``batch`` rows from one client's pool. Shared by the
+    registry entry points (``launch/train.py --algo``,
+    ``launch/serve.py --from-algo``).
+    """
+    data = {"tokens": make_federated_tokens(seed, n_clients, pool, seq_len,
+                                            vocab)}
+
+    def batch_fn(client_data, key):
+        idx = jax.random.randint(key, (batch,), 0, pool)
+        return {"tokens": client_data["tokens"][idx]}
+
+    return data, batch_fn

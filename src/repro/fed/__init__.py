@@ -1,0 +1,24 @@
+"""Unified federated-algorithm API.
+
+One protocol (:class:`FedAlgorithm`: ``init / round / eval_params``), one
+metrics schema (:data:`METRIC_KEYS`), one clock (:mod:`repro.fed.clock`),
+one registry (:func:`make_algorithm`), and one simulation harness
+(:func:`simulate` / :func:`compare`) for every server variant in the repo —
+the paper's apples-to-apples comparison (§5, App. A) as infrastructure.
+
+    from repro.fed import make_algorithm, compare
+    algs = {n: make_algorithm(n, fed, loss_fn=..., template=...,
+                              batch_fn=...)
+            for n in ("quafl", "fedavg")}
+    traces = compare(algs, params0, data, key, until_sim_time=1000.0,
+                     eval_fn=lambda p: {"loss": float(loss(p, test)[0])})
+"""
+from repro.fed.api import (FedAlgorithm, METRIC_KEYS,  # noqa: F401
+                           normalize_metrics)
+from repro.fed.clock import (ArrivalQueue, client_speeds,  # noqa: F401
+                             completion_time, expected_steps, lazy_h_steps,
+                             sample_clients, speeds_for,
+                             straggler_round_time)
+from repro.fed.registry import (make_algorithm,  # noqa: F401
+                                register_algorithm, registered_algorithms)
+from repro.fed.simulate import Trace, compare, simulate  # noqa: F401

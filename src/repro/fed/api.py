@@ -1,0 +1,82 @@
+"""The federated-algorithm protocol and the standardized metrics schema.
+
+The paper's contribution is a *family* of server algorithms compared under
+one clock — QuAFL vs. FedAvg vs. FedBuff at equal simulated wall-clock and
+equal communication bits (§5, App. A). Every server variant in this repo
+therefore implements ONE protocol so a single harness
+(:mod:`repro.fed.simulate`) can run any of them to an equal budget:
+
+  * ``init(params0) -> state``        — fresh algorithm state from a params
+    pytree (the state layout is algorithm-specific and opaque to callers),
+  * ``round(state, data, key) -> (state, metrics)`` — one *server* round.
+    ``data`` is the stacked per-client dataset pytree (leaves lead with an
+    ``(n_clients, ...)`` axis); ``key`` is a jax PRNG key. Algorithms whose
+    control flow is event-driven rather than SPMD (FedBuff) may keep python
+    state and ignore ``key`` after the first call — the protocol promises
+    determinism given ``init`` + the sequence of ``round`` keys, not
+    jit-ability,
+  * ``eval_params(state) -> params`` — the server model as a params pytree
+    (what gets evaluated, checkpointed, and served).
+
+**Metrics schema** — every ``round`` returns a dict containing at least
+:data:`METRIC_KEYS`:
+
+  ``sim_time``      cumulative simulated wall-clock after this round (s)
+  ``round_time``    simulated duration of this round (s)
+  ``bits_up``       client->server bits sent THIS round
+  ``bits_down``     server->client bits sent THIS round
+  ``h_steps_mean``  mean local SGD steps completed by the sampled clients
+  ``quant_err``     mean relative quantization error of decoded uplink
+                    messages (0.0 where nothing is quantized)
+
+Bit counters follow the paper's accounting, which each algorithm's legacy
+totals pin bit-for-bit: QuAFL's downlink Enc(X_t) is ONE broadcast message
+(every sampled client decodes the same codes against its own model), while
+FedAvg and FedBuff downlinks are per-client unicasts of the fp32 model
+(s·d·32 resp. d·32 per restart) — the server model is the decode *payload*
+there, not a shared code. Equal-bits comparisons inherit this convention.
+
+Algorithms are free to add extra keys (``h_zero_frac``, ``c_norm``,
+``bits_width``, ...); consumers that only rely on the schema keys stay
+algorithm-agnostic. :func:`normalize_metrics` fills any missing schema key
+with its documented default so downstream code can index unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, Tuple, runtime_checkable
+
+METRIC_KEYS = ("sim_time", "round_time", "bits_up", "bits_down",
+               "h_steps_mean", "quant_err")
+
+_DEFAULTS = {"sim_time": 0.0, "round_time": 0.0, "bits_up": 0.0,
+             "bits_down": 0.0, "h_steps_mean": 0.0, "quant_err": 0.0}
+
+
+@runtime_checkable
+class FedAlgorithm(Protocol):
+    """Structural type every registered server algorithm satisfies."""
+
+    def init(self, params0) -> Any:
+        ...
+
+    def round(self, state, data, key) -> Tuple[Any, Dict[str, Any]]:
+        ...
+
+    def eval_params(self, state) -> Any:
+        ...
+
+
+def normalize_metrics(metrics: Dict[str, Any]) -> Dict[str, float]:
+    """Schema-complete, python-float view of a round's metrics dict.
+
+    Missing schema keys get their documented defaults; every value is
+    coerced with ``float`` (device scalars become host floats), extra keys
+    are preserved when scalar-coercible and dropped otherwise.
+    """
+    out = dict(_DEFAULTS)
+    for k, v in metrics.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            continue  # non-scalar extras are not part of the trace format
+    return out

@@ -1,0 +1,131 @@
+"""Shared simulation clock: client speeds, lazy H-step draws, stragglers,
+and buffered arrivals.
+
+Every server variant in the paper's comparison (§5, App. A) runs against the
+same client-speed model — per-step durations are Exp(λ_i) with λ chosen by a
+fast/slow split — but each algorithm observes that clock differently:
+
+  * **QuAFL** polls s clients per round and lazily replays the
+    ``min(K, Poisson(λ_i · elapsed))`` local steps each would have completed
+    since its last interaction (App. B.1: unsampled clients' steps have no
+    observable effect, so they are drawn at poll time),
+  * **FedAvg** waits for the slowest sampled client: the round takes
+    ``max_i Gamma(K, λ_i)`` plus the server interaction time,
+  * **FedBuff** is event-driven: each client finishes its K steps after a
+    ``Gamma(K, λ_i)`` duration and its arrival lands in a shared buffer.
+
+This module is the single home for all three observations — previously the
+plumbing was copy-pasted across ``core/quafl.py``, ``core/fedavg.py`` and
+``core/fedbuff.py``. Functions are numerically identical to the originals
+(same distributions, same key usage), so seeded runs are unchanged.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+
+
+# ---------------------------------------------------------------------------
+# client speed model (paper App. A)
+# ---------------------------------------------------------------------------
+
+def client_speeds(fed: FedConfig, n: int) -> np.ndarray:
+    """λ per client: first ``slow_frac``·n clients are slow (paper App. A:
+    step time ~ Exp(λ), λ=1/2 fast, λ=1/8 slow, 30% slow)."""
+    lam = np.full(n, fed.lam_fast, dtype=np.float32)
+    n_slow = int(round(fed.slow_frac * n))
+    lam[:n_slow] = fed.lam_slow
+    return lam
+
+
+def speeds_for(fed: FedConfig, n: int, uniform: bool = False) -> np.ndarray:
+    """Speed vector, optionally forcing every client to the fast rate."""
+    if uniform:
+        return np.full(n, fed.lam_fast, np.float32)
+    return client_speeds(fed, n)
+
+
+def expected_steps(fed: FedConfig, lam: np.ndarray) -> np.ndarray:
+    """H_i = E[steps between interactions], capped at K. Between interactions
+    a client has ≈ n/s · (swt+sit) time in expectation."""
+    elapsed = (fed.swt + fed.sit) * max(fed.n_clients / fed.s, 1.0)
+    return np.minimum(fed.local_steps, np.maximum(lam * elapsed, 1e-3))
+
+
+# ---------------------------------------------------------------------------
+# QuAFL-style polling: sampling + lazy H-step replay counts
+# ---------------------------------------------------------------------------
+
+def sample_clients(key, n: int, s: int) -> jnp.ndarray:
+    """The round's polled-client index set (uniform, without replacement)."""
+    return jax.random.choice(key, n, (s,), replace=False)
+
+
+def lazy_h_steps(key, lam, elapsed, local_steps: int) -> jnp.ndarray:
+    """H_i^t = min(K, Poisson(λ_i · elapsed_i)) — the number of Exp(λ_i)-
+    duration steps client i would have completed since its last interaction
+    (drawn lazily at poll time, App. B.1). May be 0: the client is polled
+    mid-flight with no progress and still participates (paper §2.2)."""
+    return jnp.minimum(jax.random.poisson(key, lam * elapsed),
+                       local_steps).astype(jnp.int32)
+
+
+def straggler_round_time(key, lam, local_steps: int, sit: float):
+    """Synchronous round duration: the slowest sampled client's K-step
+    Gamma(K, λ_i) duration plus the server interaction time (FedAvg)."""
+    s = lam.shape[0]
+    steps = jax.random.gamma(key, local_steps * jnp.ones((s,))) / lam
+    return jnp.max(steps) + sit
+
+
+# ---------------------------------------------------------------------------
+# FedBuff-style buffered arrivals (event-driven, numpy rng)
+# ---------------------------------------------------------------------------
+
+def completion_time(rng: np.random.Generator, local_steps: int,
+                    lam: float) -> float:
+    """Duration of one client's K local steps: Gamma(K, 1/λ)."""
+    return float(rng.gamma(local_steps, 1.0 / lam))
+
+
+class ArrivalQueue:
+    """Min-heap of (finish_time, client) completion events.
+
+    The buffered-asynchronous server pops arrivals in time order; each pop
+    is immediately followed by a :meth:`push` rescheduling the client's next
+    completion. Pure container — all randomness comes from the caller's rng
+    through :func:`completion_time`, preserving the legacy event order.
+    """
+
+    def __init__(self, events: List[Tuple[float, int]] = None):
+        self.events: List[Tuple[float, int]] = list(events or [])
+        heapq.heapify(self.events)
+
+    @classmethod
+    def initial(cls, rng: np.random.Generator, lam: np.ndarray,
+                local_steps: int) -> "ArrivalQueue":
+        q = cls()
+        for i in range(len(lam)):
+            q.push(completion_time(rng, local_steps, lam[i]), i)
+        return q
+
+    def push(self, t: float, client: int):
+        heapq.heappush(self.events, (t, client))
+
+    def pop(self) -> Tuple[float, int]:
+        return heapq.heappop(self.events)
+
+    def peek(self) -> Tuple[float, int]:
+        return self.events[0]
+
+    def __len__(self):
+        return len(self.events)
+
+    def copy(self) -> "ArrivalQueue":
+        return ArrivalQueue(self.events)

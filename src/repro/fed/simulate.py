@@ -1,0 +1,154 @@
+"""Generic simulation harness: run ANY registered algorithm to a budget.
+
+The paper's comparisons (§5, App. A) hold the *budget* fixed — equal
+simulated wall-clock, or equal communication bits — and let each algorithm
+spend it its own way (QuAFL polls often and cheaply; FedAvg waits for
+stragglers; FedBuff flushes a buffer). :func:`simulate` runs one
+:class:`repro.fed.FedAlgorithm` until its budget is exhausted and emits ONE
+trace format; :func:`compare` does it for a named set of algorithms under
+identical seeds and budgets, which is the apples-to-apples harness every
+figure-style experiment (and ``benchmarks/bench_algorithms.py``) drives.
+
+A trace row is a plain dict with the standardized metrics schema keys
+(:data:`repro.fed.api.METRIC_KEYS`, all PER-ROUND exactly as the algorithm
+returned them) plus ``round``, ``wall_time_s`` (host wall-clock when the
+row was recorded), the CUMULATIVE counters ``bits_up_total`` /
+``bits_down_total``, and whatever the optional ``eval_fn`` returns (dict
+results are merged in; scalars land under ``"eval"``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.fed.api import FedAlgorithm, normalize_metrics
+
+
+@dataclass
+class Trace:
+    """The single trace format every simulation emits."""
+    algorithm: str
+    rows: List[Dict[str, Any]] = field(default_factory=list)
+    final_state: Any = None
+    rounds: int = 0
+    wall_time_s: float = 0.0
+    eval_time_s: float = 0.0   # host time spent inside eval_fn
+
+    @property
+    def us_per_round(self) -> float:
+        """Mean wall time per algorithm round, EXCLUDING eval_fn time — so
+        benchmark numbers measure round cost, not eval cadence."""
+        return ((self.wall_time_s - self.eval_time_s)
+                / max(self.rounds, 1) * 1e6)
+
+    @property
+    def final(self) -> Dict[str, Any]:
+        return self.rows[-1] if self.rows else {}
+
+    def column(self, key: str) -> List[Any]:
+        return [r.get(key) for r in self.rows]
+
+
+def simulate(alg: FedAlgorithm, params0, data, key, *,
+             rounds: Optional[int] = None,
+             until_sim_time: Optional[float] = None,
+             until_bits: Optional[float] = None,
+             eval_every: int = 10,
+             record_every: int = 0,
+             eval_fn: Optional[Callable[[Any], Any]] = None,
+             on_row: Optional[Callable[[Dict[str, Any]], None]] = None,
+             name: str = "", max_rounds: int = 100_000) -> Trace:
+    """Run ``alg`` from ``params0`` until the budget is exhausted.
+
+    Budgets compose (first one hit wins): ``rounds`` server rounds,
+    ``until_sim_time`` simulated seconds, ``until_bits`` total communication
+    bits (up + down). At least one must be given; ``max_rounds`` is the
+    backstop when a sim-time/bits budget is unreachable (e.g. an algorithm
+    that never sends bits), and the final round is always recorded (and
+    evaluated) even when the loop ends on the backstop. ``eval_fn(params)``
+    is called every ``eval_every`` rounds (and on the final round); its
+    result lands in the trace row. ``record_every`` records metrics-only
+    rows on its own (usually denser) cadence WITHOUT paying for an eval —
+    e.g. ``record_every=1, eval_every=0`` traces every round's
+    ``h_zero_frac`` but evaluates only once, at the end. ``on_row`` streams
+    every recorded row to the caller as it happens (progress logging).
+
+    Device->host syncs happen only where a value is genuinely needed on the
+    host: the stop condition of an active sim-time/bits budget, and row
+    recording. A rounds-only budget leaves the device pipeline free to run
+    ahead between recorded rows.
+    """
+    if rounds is None and until_sim_time is None and until_bits is None:
+        raise ValueError("give at least one budget: rounds / until_sim_time "
+                         "/ until_bits")
+    trace = Trace(algorithm=name or type(alg).__name__)
+    state = alg.init(params0)
+    # cumulative counters accumulate device-side (no per-round sync)
+    bits_up = bits_down = 0.0
+    t0 = time.time()
+    r = 0
+    metrics = {}
+    limit = min(rounds, max_rounds) if rounds is not None else max_rounds
+
+    evaled_round = 0   # last round whose row carried an eval_fn result
+
+    def run_eval():
+        nonlocal evaled_round
+        t_e = time.time()
+        res = eval_fn(alg.eval_params(state))
+        trace.eval_time_s += time.time() - t_e
+        evaled_round = r
+        return res if isinstance(res, dict) else {"eval": res}
+
+    def record(do_eval: bool):
+        row = dict(normalize_metrics(metrics), round=r,
+                   bits_up_total=float(bits_up),
+                   bits_down_total=float(bits_down),
+                   wall_time_s=time.time() - t0)
+        if do_eval and eval_fn is not None:
+            row.update(run_eval())
+        trace.rows.append(row)
+        if on_row is not None:
+            on_row(row)
+
+    done = False
+    while r < limit and not done:
+        key, sub = jax.random.split(key)
+        state, metrics = alg.round(state, data, sub)
+        r += 1
+        bits_up = bits_up + metrics.get("bits_up", 0.0)
+        bits_down = bits_down + metrics.get("bits_down", 0.0)
+        done = rounds is not None and r >= rounds
+        if not done and until_sim_time is not None:
+            done = float(metrics.get("sim_time", 0.0)) >= until_sim_time
+        if not done and until_bits is not None:
+            done = float(bits_up) + float(bits_down) >= until_bits
+        do_eval = done or (eval_every and r % eval_every == 0)
+        if do_eval or (record_every and r % record_every == 0):
+            record(do_eval)
+    # backstop exit (unreachable budget / max_rounds): the loop above only
+    # guarantees a final evaluated row when `done` fired — make sure
+    # trace.final and the final eval always exist. If an eval-less row for
+    # the final round was already recorded (and streamed), update it in
+    # place rather than re-recording, so on_row never fires twice for one
+    # round.
+    if r and (not trace.rows or trace.rows[-1]["round"] != r):
+        record(True)
+    elif r and eval_fn is not None and evaled_round != r:
+        trace.rows[-1].update(run_eval())
+    trace.final_state = state
+    trace.rounds = r
+    trace.wall_time_s = time.time() - t0
+    return trace
+
+
+def compare(algorithms: Dict[str, FedAlgorithm], params0, data, key,
+            **sim_kw) -> Dict[str, Trace]:
+    """Run every named algorithm from the SAME initial params, key stream,
+    and budget — the paper's equal-clock / equal-bits comparison. Returns
+    ``{name: Trace}`` in input order."""
+    return {name: simulate(alg, params0, data, key, name=name, **sim_kw)
+            for name, alg in algorithms.items()}

@@ -13,6 +13,11 @@ pass per (r, c) Hadamard block:
                         rotated-space pipeline reuses them as the decode
                         reference, so the extra output replaces a whole
                         second rotation pass)
+  * ``quantize_codes``— stochastic round + wrap of ALREADY-ROTATED coords:
+                        the elementwise second half of ``fused_encode``. The
+                        pipeline uses it to encode the server downlink from
+                        its cached rotated coordinates, dropping the round's
+                        forward-rotation budget from s+2 to s+1
   * ``snap_codes``    — positional snap only (stay in rotated space; the
                         pipeline averages rotated vectors and inverse-rotates
                         once at the end of the round)
@@ -103,6 +108,12 @@ def _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref, y_ref,
     c_ref[0, 0] = jnp.mod(q, float(levels)).astype(jnp.uint32)
     if want_rotated:
         y_ref[0, 0] = y
+
+
+def _quantize_kernel(y_ref, u_ref, g_ref, c_ref, *, levels: int):
+    g = g_ref[0, 0]
+    q = jnp.floor(y_ref[0, 0].astype(jnp.float32) / g + u_ref[0, 0])
+    c_ref[0, 0] = jnp.mod(q, float(levels)).astype(jnp.uint32)
 
 
 def _snap_kernel(c_ref, w_ref, g_ref, o_ref, *, levels: int):
@@ -204,6 +215,35 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
     if want_rotated:
         return res[1].reshape(m, d_pad), codes
     return codes
+
+
+@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def quantize_codes(y2: jnp.ndarray, u2: jnp.ndarray, gammas: jnp.ndarray, *,
+                   bits: int = 8, block: int = DEFAULT_BLOCK,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Stochastic-round + wrap of already-rotated coordinates.
+
+    y2: (m, d_pad) ROTATED messages; u2: U(0,1) rounding noise, same shape;
+    gammas: (m,) per-message scales. Elementwise — no Hadamard factors touch
+    the MXU, so encoding a cached rotated vector costs no rotation pass.
+    Bit-identical to the quantize half of ``fused_encode``.
+    """
+    m, d_pad = y2.shape
+    _, _, r, c, nb = block_geometry(d_pad, block)
+    out = pl.pallas_call(
+        partial(_quantize_kernel, levels=1 << bits),
+        grid=(m, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.uint32),
+        interpret=interpret,
+    )(_blk(y2.astype(jnp.float32), nb, r, c),
+      _blk(u2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
+    return out.reshape(m, d_pad)
 
 
 @partial(jax.jit, static_argnames=("bits", "block", "interpret"))

@@ -4,56 +4,91 @@ On this container it runs reduced/small variants on the single CPU device;
 on a pod, point --mesh-data/--mesh-model at the real topology and the same
 program distributes via GSPMD.
 
+Two execution paths:
+
+  * ``--algo spmd`` (default) — the distributed train step
+    (``launch/steps.py``): clients live on mesh slots, the quantized
+    exchange runs as mesh collectives.
+  * ``--algo quafl|fedavg|fedbuff|sequential|quafl_scaffold|adaptive_quafl``
+    — the unified algorithm registry (``repro.fed``): the named server
+    variant runs through the generic ``simulate()`` harness with the
+    standardized metrics schema (``sim_time``, ``bits_up``, ``bits_down``,
+    ``h_steps_mean``, ``quant_err``). Any registry algorithm trains any
+    architecture — the protocol only sees a params pytree.
+
 Example (the (b) end-to-end driver — ~100M-param model, a few hundred rounds):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 200 --batch 8 --seq 128 --n-slots 4 --log-every 20
+Registry path:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --algo quafl --steps 40 --batch 4 --seq 64 --n-slots 4
 """
 from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import SHAPES, get_config, get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
-from repro.data.synthetic import lm_token_stream
+from repro.data.synthetic import federated_token_task, lm_token_stream
 from repro.launch.steps import build_train_step, init_train_state
 from repro.models.model import lm_loss
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--n-slots", type=int, default=2)
-    ap.add_argument("--local-steps", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=0.02)
-    ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--quantizer", default="lattice")
-    ap.add_argument("--transport", default="dequant_psum")
-    ap.add_argument("--mesh-data", type=int, default=1)
-    ap.add_argument("--mesh-model", type=int, default=1)
-    ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--checkpoint-dir", default="")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def run_registry(args, cfg, fed, key):
+    """Train via the unified algorithm API: registry + simulate()."""
+    from repro.fed import make_algorithm, simulate
+    from repro.models.model import init_lm
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
-                    local_steps=args.local_steps, lr=args.lr,
-                    bits=args.bits, quantizer=args.quantizer,
-                    transport=args.transport)
+    k_init, k_run = jax.random.split(key)
+    params0, _ = init_lm(cfg, k_init)
+    loss_fn = partial(lm_loss, cfg)
+    pool = max(4, args.local_steps) * args.batch   # per-client token pool
+    data, batch_fn = federated_token_task(args.seed, args.n_slots, pool,
+                                          args.batch, args.seq,
+                                          cfg.vocab_size)
+
+    extra = {"buffer_size": max(2, args.n_slots)} \
+        if args.algo == "fedbuff" else {}
+    alg = make_algorithm(args.algo, fed, loss_fn=loss_fn, template=params0,
+                         batch_fn=batch_fn, **extra)
+    eval_toks = lm_token_stream(jax.random.PRNGKey(999), args.batch,
+                                args.seq, cfg.vocab_size, client_id=0)
+
+    def eval_fn(params):
+        loss, _ = lm_loss(cfg, params, {"tokens": eval_toks})
+        return {"server_loss": float(loss)}
+
+    def on_row(row):
+        print(f"round {row['round']:5d} server_loss="
+              f"{row['server_loss']:.4f} sim_t={row['sim_time']:.0f} "
+              f"h_mean={row['h_steps_mean']:.2f} "
+              f"qerr={row['quant_err']:.3e} "
+              f"bits_up={row['bits_up_total']:.3g} "
+              f"bits_down={row['bits_down_total']:.3g}"
+              f" ({row['wall_time_s']:.1f}s)", flush=True)
+
+    trace = simulate(alg, params0, data, k_run, rounds=args.steps,
+                     eval_every=args.log_every, eval_fn=eval_fn,
+                     on_row=on_row)
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, trace.rounds,
+                        alg.eval_params(trace.final_state),
+                        extra={"arch": cfg.name, "algo": args.algo})
+        print(f"checkpoint saved to {args.checkpoint_dir}")
+    return trace
+
+
+def run_spmd(args, cfg, fed, key):
+    """Legacy distributed path: mesh-sharded train step."""
     shape = ShapeConfig("cli", args.seq, args.batch * args.n_slots, "train")
     from repro.utils.compat import make_mesh
     mesh = make_mesh((args.mesh_data, args.mesh_model), ("data", "model"))
 
-    key = jax.random.PRNGKey(args.seed)
     with mesh:
         step, _, _ = build_train_step(cfg, fed, mesh, shape,
                                       fed_mode="client_dp", remat=False)
@@ -87,6 +122,42 @@ def main():
             save_checkpoint(args.checkpoint_dir, args.steps, state.server,
                             extra={"arch": cfg.name})
             print(f"checkpoint saved to {args.checkpoint_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--algo", default="spmd",
+                    help="'spmd' (mesh-sharded train step) or any registry "
+                         "name: quafl|fedavg|fedbuff|sequential|"
+                         "quafl_scaffold|adaptive_quafl")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-slots", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--quantizer", default="lattice")
+    ap.add_argument("--transport", default="dequant_psum")
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
+                    local_steps=args.local_steps, lr=args.lr,
+                    bits=args.bits, quantizer=args.quantizer,
+                    transport=args.transport)
+    key = jax.random.PRNGKey(args.seed)
+    if args.algo == "spmd":
+        run_spmd(args, cfg, fed, key)
+    else:
+        run_registry(args, cfg, fed, key)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,15 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode)
 
+    @classmethod
+    def from_algorithm(cls, cfg: ModelConfig, alg, state, **kw):
+        """Serve the server model of ANY federated run: ``alg`` is a
+        :class:`repro.fed.FedAlgorithm` and ``state`` its final state —
+        ``eval_params`` is the protocol's one door to the trained model, so
+        every registry algorithm (and every future one) is servable the
+        same way."""
+        return cls(cfg, alg.eval_params(state), **kw)
+
     def submit(self, req: Request):
         self.queue.append(req)
 

@@ -6,8 +6,10 @@ each vector is rotated once per round. These tests pin it three ways:
   * a full ``QuAFL.round`` through the fused rotated-space path must match
     the per-message materialize-everything composition (same keys/noise/γ)
     to fp32 tolerance,
-  * the trace-time rotation counter must report exactly s+2 forward and
-    s+1 inverse full-model rotations per round (seed spent ~5s+1),
+  * the trace-time rotation counter must report exactly s+1 forward and
+    s+1 inverse full-model rotations per round (seed spent ~5s+1; the first
+    fused version spent s+2 before the downlink became an elementwise
+    quantize of the cached rotated server),
   * every registered backend must agree on codes and decodes
     (``perf_smoke``: the fast sanity slice CI runs on every commit).
 """
@@ -77,7 +79,7 @@ def test_pipeline_exchange_matches_reference_directly():
 
 
 # ---------------------------------------------------------------------------
-# rotation audit: s+2 forward, s+1 inverse per round (seed: ~5s+1)
+# rotation audit: s+1 forward, s+1 inverse per round (seed: ~5s+1)
 # ---------------------------------------------------------------------------
 
 def test_rotation_count_per_round():
@@ -87,7 +89,7 @@ def test_rotation_count_per_round():
     assert alg.pipeline is not None
     alg.pipeline.stats.reset()
     st, _ = alg.round(st, part, jax.random.PRNGKey(0))   # one trace
-    assert alg.pipeline.stats.fwd == s + 2, alg.pipeline.stats
+    assert alg.pipeline.stats.fwd == s + 1, alg.pipeline.stats
     assert alg.pipeline.stats.inv == s + 1, alg.pipeline.stats
     # further rounds reuse the trace: the count is structural, per round
     alg.pipeline.stats.reset()
