@@ -1,23 +1,37 @@
 """Every registered server algorithm under ONE clock (the paper's §5 /
-App. A comparison as a benchmark): the full registry runs through
-``compare()`` at an equal simulated-wall-clock budget on the shared non-iid
-classification task, and each algorithm's accuracy / bits / rounds land in
-``BENCH_algorithms.json`` so future PRs can diff the whole family at once.
+App. A comparison as a benchmark), in two sections:
+
+  * **compare** — the registry runs through ``compare()`` at an equal
+    simulated-wall-clock budget on the shared non-iid classification task;
+    each algorithm's accuracy / bits / rounds land in
+    ``BENCH_algorithms.json`` so future PRs can diff the whole family.
+  * **engine** (``alg_scan_*`` rows) — eager loop vs scanned engine
+    (``simulate(..., scan_chunk=K)``) ``us_per_round`` for every registry
+    algorithm on a d=2^20 flat-model task at s=8 (the quantizer is 'none'
+    so the numbers isolate per-round ENGINE overhead, not kernel cost; the
+    mesh-backed ``spmd`` entry times its own reduced-LM task and reports
+    its actual d). The scanned path must stay strictly faster — that IS the
+    device-resident round engine's reason to exist.
+
+``spmd`` needs an LM config + token pools, so the compare section skips it
+(the engine section covers it).
 """
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.fed import compare, make_algorithm, registered_algorithms
+from repro.fed import compare, make_algorithm, registered_algorithms, simulate
 from repro.models.mlp import mlp_loss
 from benchmarks.common import batch_fn, emit, emit_curve, setup
 
 # per-algorithm construction kwargs (everything else is protocol-uniform)
 _KWARGS = {
     "fedbuff": {"buffer_size": 4, "server_lr": 0.7, "quantize": True},
+    "fedbuff_device": {"buffer_size": 4, "server_lr": 0.7, "quantize": True},
 }
 
 
-def main(rounds: int = 100):
+def _compare_section(rounds: int):
     fed = FedConfig(n_clients=16, s=4, local_steps=5, lr=0.3, bits=10,
                     swt=10.0)
     part, test, params0 = setup(fed, iid=False)
@@ -26,7 +40,8 @@ def main(rounds: int = 100):
     algs = {name: make_algorithm(name, fed, loss_fn=mlp_loss,
                                  template=params0, batch_fn=batch_fn,
                                  **_KWARGS.get(name, {}))
-            for name in registered_algorithms()}
+            for name in registered_algorithms() if name != "spmd"}
+
     def eval_fn(p):
         loss, metr = mlp_loss(p, test)
         return {"loss": float(loss), "acc": float(metr["acc"])}
@@ -45,6 +60,105 @@ def main(rounds: int = 100):
         emit_curve(f"alg_{name}", [
             (r["round"], r["sim_time"], r["loss"], r["acc"],
              r["bits_up_total"] + r["bits_down_total"]) for r in tr.rows])
+
+
+# ---------------------------------------------------------------------------
+# engine section: eager vs scanned us_per_round per registry algorithm
+# ---------------------------------------------------------------------------
+
+def _flat_task(d: int, n_clients: int, key):
+    """A d-dimensional flat-model task with O(d) gradients and tiny data:
+    state/exchange work scales with d while the per-step compute stays
+    negligible, so the timing isolates the round ENGINE."""
+    params0 = {"w": 0.01 * jax.random.normal(key, (d,), jnp.float32)}
+    data = {"c": jax.random.uniform(jax.random.fold_in(key, 1),
+                                    (n_clients, 32), jnp.float32,
+                                    0.5, 1.5)}
+
+    def loss_fn(params, batch):
+        w = params["w"]
+        return 0.5 * jnp.mean(batch["c"]) * jnp.sum(w * w), {}
+
+    def bf(client_data, k):
+        idx = jax.random.randint(k, (8,), 0, 32)
+        return {"c": client_data["c"][idx]}
+
+    return params0, data, loss_fn, bf
+
+
+def _timed_us(alg, params0, data, rounds, chunk):
+    """us_per_round of the second (compiled) run."""
+    for _ in range(2):
+        tr = simulate(alg, params0, data, jax.random.PRNGKey(3),
+                      rounds=rounds, eval_every=0, scan_chunk=chunk)
+    return tr.us_per_round, tr.engine
+
+
+def _engine_section(quick: bool):
+    d = 2 ** 14 if quick else 2 ** 20
+    rounds = 8 if quick else 40
+    chunk = 4 if quick else 20
+    fed = FedConfig(n_clients=16, s=8, local_steps=2, lr=0.01,
+                    quantizer="none")
+    k0 = jax.random.PRNGKey(0)
+    params0, data, loss_fn, bf = _flat_task(d, fed.n_clients, k0)
+
+    for name in registered_algorithms():
+        if name == "spmd":
+            _engine_spmd(quick)
+            continue
+        kw = dict(_KWARGS.get(name, {}))
+        kw.pop("quantize", None)   # engine timing: no kernel cost
+        alg = make_algorithm(name, fed, loss_fn=loss_fn, template=params0,
+                             batch_fn=bf, **kw)
+        # python fedbuff cannot scan: its device twin provides the scanned
+        # column (same event simulation as a pure pytree program)
+        scan_alg = alg
+        note = ""
+        if name == "fedbuff":
+            scan_alg = make_algorithm("fedbuff_device", fed,
+                                      loss_fn=loss_fn, template=params0,
+                                      batch_fn=bf, **kw)
+            note = ";scan_engine=fedbuff_device"
+        eager_us, _ = _timed_us(alg, params0, data, rounds, 0)
+        scan_us, engine = _timed_us(scan_alg, params0, data, rounds, chunk)
+        emit(f"alg_scan_{name}", scan_us,
+             f"eager_us={eager_us:.0f};scanned_us={scan_us:.0f};"
+             f"speedup={eager_us / max(scan_us, 1e-9):.2f}x;"
+             f"d={d};s={fed.s};rounds={rounds};chunk={chunk};"
+             f"engine={engine}{note}")
+
+
+def _engine_spmd(quick: bool):
+    """The mesh path times its own (reduced-LM) task — it is the one
+    registry algorithm whose model is a params pytree on a mesh, not a
+    flat vector."""
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.data.synthetic import federated_token_task
+    from repro.models.model import init_lm
+
+    cfg = get_reduced("llama3.2-1b")
+    fed = FedConfig(n_clients=1, s=1, local_steps=2, lr=0.05, bits=8)
+    params0, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    d = int(sum(np.prod(v.shape) for v in params0.values()))
+    data, bf = federated_token_task(0, 1, 8, 2, 16, cfg.vocab_size)
+    alg = make_algorithm("spmd", fed, loss_fn=None, template=params0,
+                         batch_fn=bf, cfg=cfg, batch=2, seq=16)
+    rounds = 3 if quick else 8
+    eager_us, _ = _timed_us(alg, params0, data, rounds, 0)
+    scan_us, engine = _timed_us(alg, params0, data, rounds, rounds)
+    emit("alg_scan_spmd", scan_us,
+         f"eager_us={eager_us:.0f};scanned_us={scan_us:.0f};"
+         f"speedup={eager_us / max(scan_us, 1e-9):.2f}x;"
+         f"d={d};s=1;rounds={rounds};chunk={rounds};engine={engine};"
+         f"arch={cfg.name}")
+
+
+def main(rounds: int = 100):
+    _compare_section(rounds)
+    _engine_section(quick=rounds < 50)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,9 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_ROOT, "BENCH_exchange.json")
 # benches whose records get their own baseline file (name -> path)
 JSON_TARGETS = {"algorithms": os.path.join(_ROOT, "BENCH_algorithms.json")}
+# quick-scale numbers are not comparable with the committed baselines, so
+# they land under the gitignored bench_out/ instead of the repo root
+QUICK_DIR = os.path.join(_ROOT, "bench_out")
 
 
 def _arg_value(flag: str):
@@ -98,10 +101,12 @@ def main() -> None:
     for path, records in by_target.items():
         if not records:
             continue
-        # quick-scale numbers are not comparable with the committed
-        # baseline — keep them in a sibling file
-        _write_merged(path.replace(".json", ".quick.json") if quick
-                      else path, records, quick)
+        if quick:
+            os.makedirs(QUICK_DIR, exist_ok=True)
+            path = os.path.join(
+                QUICK_DIR,
+                os.path.basename(path).replace(".json", ".quick.json"))
+        _write_merged(path, records, quick)
 
 
 if __name__ == "__main__":

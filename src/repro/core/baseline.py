@@ -67,5 +67,9 @@ class Sequential:
                              bits_up=state.bits_up,
                              bits_down=state.bits_down), metrics
 
+    def device_round(self, state: BaselineState, data, key):
+        """Device-resident round capability (:mod:`repro.fed.engine`)."""
+        return self.round(state, data, key)
+
     def eval_params(self, state):
         return tree_unflatten_vector(self.template, state.server)

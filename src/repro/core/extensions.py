@@ -225,6 +225,7 @@ class AdaptiveQuaflAlgorithm:
         self.make_alg = make_alg
         self.lo, self.hi, self.b_min, self.b_max = lo, hi, b_min, b_max
         self._algs = {}
+        self._engines = {}   # bits -> RoundEngine over that bit-width's alg
 
     def _alg(self, bits: int):
         if bits not in self._algs:
@@ -247,6 +248,32 @@ class AdaptiveQuaflAlgorithm:
         return AdaptiveState(
             inner=inner, bits=new_bits,
             trace=(state.trace + (state.bits,))[-_TRACE_CAP:]), metrics
+
+    def scan_rounds(self, state: AdaptiveState, data, key, length: int):
+        """Chunked scan support (:class:`repro.fed.engine.RoundEngine`).
+
+        The bit-width selects a jit cache, so it cannot change inside a
+        traced chunk: the chunk runs at the state's CURRENT bits and the
+        walk reacts ONCE per chunk, to the chunk's last measured
+        ``quant_err`` — chunk-level adaptation instead of the eager path's
+        round-level adaptation, in exchange for one host sync per chunk.
+        ``scan_chunk=1`` recovers the eager walk exactly.
+        """
+        from repro.fed.engine import RoundEngine
+        eng = self._engines.get(state.bits)
+        if eng is None:
+            eng = self._engines[state.bits] = RoundEngine(
+                self._alg(state.bits))
+        key, inner, ms = eng.run_chunk(state.inner, data, key, length)
+        rel = float(ms["quant_err"][-1])   # the chunk-boundary host sync
+        new_bits = AdaptiveBits.walk(state.bits, rel, self.lo, self.hi,
+                                     self.b_min, self.b_max)
+        ms = dict(ms)
+        ms["bits_width"] = jnp.full((length,), float(state.bits))
+        new_state = AdaptiveState(
+            inner=inner, bits=new_bits,
+            trace=(state.trace + (state.bits,) * length)[-_TRACE_CAP:])
+        return key, new_state, ms
 
     def eval_params(self, state: AdaptiveState):
         return self._alg(state.bits).eval_params(state.inner)

@@ -101,5 +101,9 @@ class FedAvg:
                            bits_up=state.bits_up + bits_up,
                            bits_down=state.bits_down + bits_down), metrics
 
+    def device_round(self, state: FedAvgState, data, key):
+        """Device-resident round capability (:mod:`repro.fed.engine`)."""
+        return self.round(state, data, key)
+
     def eval_params(self, state):
         return tree_unflatten_vector(self.template, state.server)

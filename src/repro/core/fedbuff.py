@@ -33,7 +33,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 from functools import partial
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,9 @@ import numpy as np
 
 from repro.compression.lattice import make_quantizer
 from repro.configs.base import FedConfig
-from repro.fed.clock import ArrivalQueue, completion_time, speeds_for
+from repro.fed.clock import (ArrivalQueue, completion_time,
+                             completion_time_device, speeds_for)
+from repro.fed.engine import RingBuffer, ring_init, ring_pop, ring_push
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
 
 
@@ -234,3 +236,187 @@ class FedBuff:
                             state.bits_sent))
             next_eval += eval_every
         return history
+
+
+# ---------------------------------------------------------------------------
+# device-resident formulation (jit/scan-able; registry name fedbuff_device)
+# ---------------------------------------------------------------------------
+
+class FedBuffDeviceState(NamedTuple):
+    """Pure-pytree FedBuff state: the python heap becomes a fixed-capacity
+    :class:`repro.fed.engine.RingBuffer` (one pending completion per client,
+    so capacity = n_clients and the buffer is always exactly full)."""
+    server: jnp.ndarray        # (d,)
+    start: jnp.ndarray         # (n, d) model each client restarted from
+    queue: RingBuffer          # pending completion events
+    occ: jnp.ndarray           # (n,) i32 per-client draw counters
+    sim_time: jnp.ndarray      # f32 scalar
+    t: jnp.ndarray             # i32 server updates applied
+    bits_up: jnp.ndarray       # f32 scalar
+    bits_down: jnp.ndarray     # f32 scalar
+    jkey: jax.Array            # event key stream (local steps + quantize)
+    live: jnp.ndarray          # bool: queue/jkey seeded by the first round
+
+    @property
+    def bits_sent(self):
+        """Total communication bits, both directions (legacy accessor)."""
+        return self.bits_up + self.bits_down
+
+
+@dataclass(eq=False)
+class FedBuffDevice(FedBuff):
+    """Buffered asynchronous aggregation as PURE traced code.
+
+    Semantically the same event simulation as :class:`FedBuff` — pop the
+    earliest completion, compute the client's K-step delta, buffer it, flush
+    every ``buffer_size`` arrivals, reschedule the client — but the state is
+    a registered pytree and ``round`` is a single jit/scan-able program
+    (``lax.scan`` over the Z completions of one flush; masked-min pop on the
+    device ring buffer). This is what lets FedBuff join the scanned
+    ``simulate()`` fast path and the SPMD engine (ROADMAP: "FedBuff protocol
+    state, jit-able").
+
+    Randomness: per-completion model/quantizer keys follow the legacy
+    ``jkey`` split schedule exactly. Completion DURATIONS come from
+    ``jax.random.gamma`` (device stream) by default — same distribution,
+    different draws than the legacy numpy rng. Passing ``completion_table``
+    (built by :func:`repro.fed.engine.fedbuff_completion_table` from the
+    same seed — the "seed bridge") makes the device algorithm consume the
+    EXACT legacy draws, pinning it bit-for-bit against :class:`FedBuff`
+    (equivalence test in ``tests/test_engine.py``).
+
+    Key semantics match the python class: the FIRST ``round`` key seeds the
+    event stream (model-step, quantizer, and duration randomness all derive
+    from the carried ``jkey``/table from then on) and later round keys are
+    ignored — vary the seeding key, not later keys, to get an independent
+    event stream. Determinism given ``init`` + the first key holds, and a
+    scanned run is bit-for-bit the eager run.
+    """
+    completion_table: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._lam_j = jnp.asarray(self.lam)
+        self._table_j = (jnp.asarray(self.completion_table, jnp.float32)
+                         if self.completion_table is not None else None)
+
+    # ------------------------------------------------------------------
+    def init(self, params0) -> FedBuffDeviceState:
+        server = tree_flatten_vector(params0)
+        n = self.fed.n_clients
+        return FedBuffDeviceState(
+            server=server, start=jnp.tile(server[None], (n, 1)),
+            queue=ring_init(n), occ=jnp.zeros((n,), jnp.int32),
+            sim_time=jnp.zeros(()), t=jnp.zeros((), jnp.int32),
+            bits_up=jnp.zeros(()), bits_down=jnp.zeros(()),
+            jkey=jax.random.PRNGKey(0), live=jnp.zeros((), bool))
+
+    def _duration(self, kt, i, occ_i):
+        """Client i's next K-step duration: seed-bridge table lookup when
+        pinned, else a device Gamma(K, 1/λ_i) draw. A table exhausted
+        mid-simulation (more completions than the bridge replayed) poisons
+        the clock with NaN instead of silently clamping the gather — an
+        un-pinned event stream must be loud, not approximately right."""
+        if self._table_j is not None:
+            return jnp.where(occ_i < self._table_j.shape[1],
+                             self._table_j[i, occ_i], jnp.nan)
+        return completion_time_device(kt, self.fed.local_steps,
+                                      self._lam_j[i])
+
+    def _seeded(self, state: FedBuffDeviceState, key):
+        """First-round seeding: initial completion draws for every client
+        (table column 0 under the bridge, device draws otherwise)."""
+        n = self.fed.n_clients
+        if self._table_j is not None:
+            times = self._table_j[:, 0]
+        else:
+            kts = jax.random.split(jax.random.fold_in(key, 0), n)
+            times = jax.vmap(completion_time_device,
+                             in_axes=(0, None, 0))(
+                kts, self.fed.local_steps, self._lam_j)
+        queue = RingBuffer(times=times.astype(jnp.float32),
+                           clients=jnp.arange(n, dtype=jnp.int32))
+        return queue, jnp.ones((n,), jnp.int32), key
+
+    # ------------------------------------------------------------------
+    def device_round(self, state: FedBuffDeviceState, data, key):
+        """One server update (one buffer flush) = a scan over exactly
+        ``buffer_size`` completion events, fully on device."""
+        fed = self.fed
+        Z, d = self.buffer_size, self.d
+        queue, occ, jkey = jax.lax.cond(
+            state.live,
+            lambda: (state.queue, state.occ, state.jkey),
+            lambda: self._seeded(state, key))
+
+        def completion(carry, z):
+            queue, occ, jkey, server, start, t_last, buffer, errs = carry
+            queue, t_now, i = ring_pop(queue)
+            jkey, sub = jax.random.split(jkey)
+            delta = self._local(start[i], jax.tree_util.tree_map(
+                lambda a: a[i], data), sub)
+            rel = jnp.zeros(())
+            if self.quantize:
+                jkey, qk = jax.random.split(jkey)
+                msg = self.quant.encode(
+                    qk, delta, jnp.linalg.norm(delta) + 1e-12)
+                dq = self.quant.decode(qk, msg, jnp.zeros_like(delta))
+                rel = (jnp.linalg.norm(dq - delta)
+                       / (jnp.linalg.norm(delta) + 1e-12))
+                delta = dq
+            buffer = buffer.at[z].set(delta)
+            errs = errs.at[z].set(rel)
+            # the buffer starts empty every protocol round, so the flush
+            # lands on the Z-th completion — same mean-of-stack as legacy
+            server = jax.lax.cond(
+                z == Z - 1,
+                lambda s: s - self.server_lr * jnp.mean(buffer, 0),
+                lambda s: s, server)
+            start = start.at[i].set(server)
+            if self._table_j is None:
+                jkey, kt = jax.random.split(jkey)
+            else:
+                kt = jkey   # bridge mode consumes no extra key (numpy rng
+            #               # drew the durations in the legacy stream)
+            dur = self._duration(kt, i, occ[i])
+            occ = occ.at[i].add(1)
+            queue = ring_push(queue, t_now + dur, i)
+            return (queue, occ, jkey, server, start, t_now, buffer,
+                    errs), None
+
+        carry0 = (queue, occ, jkey, state.server, state.start,
+                  state.sim_time, jnp.zeros((Z, d)), jnp.zeros((Z,)))
+        (queue, occ, jkey, server, start, t_now, _, errs), _ = jax.lax.scan(
+            completion, carry0, jnp.arange(Z))
+
+        up_per = (self.quant.message_bits(d) if self.quantize else d * 32)
+        bits_up = jnp.asarray(Z * up_per, jnp.float32)
+        bits_down = jnp.asarray(Z * d * 32, jnp.float32)
+        new_time = t_now.astype(jnp.float32)
+        new_state = FedBuffDeviceState(
+            server=server, start=start, queue=queue, occ=occ,
+            sim_time=new_time, t=state.t + 1,
+            bits_up=state.bits_up + bits_up,
+            bits_down=state.bits_down + bits_down,
+            jkey=jkey, live=jnp.ones((), bool))
+        metrics = {
+            "sim_time": new_time,
+            "round_time": new_time - state.sim_time,
+            "bits_up": bits_up,
+            "bits_down": bits_down,
+            "h_steps_mean": jnp.asarray(fed.local_steps, jnp.float32),
+            "quant_err": (jnp.mean(errs) if self.quantize
+                          else jnp.zeros(())),
+            "buffer_flushes": jnp.ones(()),
+        }
+        return new_state, metrics
+
+    @partial(jax.jit, static_argnums=0)
+    def round(self, state: FedBuffDeviceState, data, key):
+        return self.device_round(state, data, key)
+
+    def eval_params(self, state: FedBuffDeviceState):
+        return tree_unflatten_vector(self.template, state.server)
+
+    # the legacy event loop belongs to the python implementation only
+    run = None

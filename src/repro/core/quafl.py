@@ -237,6 +237,12 @@ class QuAFL:
         return state, metrics
 
     # ------------------------------------------------------------------
+    def device_round(self, state: QuaflState, data, key):
+        """Device-resident round capability (:mod:`repro.fed.engine`): the
+        round body is pure traced code — state a pytree, metrics device
+        scalars — so the engine can ``lax.scan`` it in K-round chunks."""
+        return self.round(state, data, key)
+
     def eval_params(self, state: QuaflState):
         return tree_unflatten_vector(self.template, state.server)
 

@@ -16,9 +16,13 @@ the paper's apples-to-apples comparison (§5, App. A) as infrastructure.
 from repro.fed.api import (FedAlgorithm, METRIC_KEYS,  # noqa: F401
                            normalize_metrics)
 from repro.fed.clock import (ArrivalQueue, client_speeds,  # noqa: F401
-                             completion_time, expected_steps, lazy_h_steps,
-                             sample_clients, speeds_for,
-                             straggler_round_time)
+                             completion_time, completion_time_device,
+                             expected_steps, lazy_h_steps, sample_clients,
+                             speeds_for, straggler_round_time)
+from repro.fed.engine import (DeviceFedAlgorithm, RingBuffer,  # noqa: F401
+                              RoundEngine, fedbuff_completion_table,
+                              ring_init, ring_peek, ring_pop, ring_push,
+                              ring_size, supports_scan)
 from repro.fed.registry import (make_algorithm,  # noqa: F401
                                 register_algorithm, registered_algorithms)
 from repro.fed.simulate import Trace, compare, simulate  # noqa: F401

@@ -40,6 +40,14 @@ Algorithms are free to add extra keys (``h_zero_frac``, ``c_norm``,
 ``bits_width``, ...); consumers that only rely on the schema keys stay
 algorithm-agnostic. :func:`normalize_metrics` fills any missing schema key
 with its documented default so downstream code can index unconditionally.
+
+**Device-round capability** (optional): algorithms whose round body is pure
+traced code — pytree state, device-scalar metrics with a fixed dict
+structure, no host syncs — additionally expose ``device_round(state, data,
+key)`` (see :class:`repro.fed.engine.DeviceFedAlgorithm`). The scanned
+execution engine (``simulate(..., scan_chunk=K)``) runs such algorithms in
+K-round ``lax.scan`` chunks with one host sync per chunk; everything else
+falls back to the eager per-round loop.
 """
 from __future__ import annotations
 

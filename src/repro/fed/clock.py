@@ -94,6 +94,16 @@ def completion_time(rng: np.random.Generator, local_steps: int,
     return float(rng.gamma(local_steps, 1.0 / lam))
 
 
+def completion_time_device(key, local_steps: int, lam) -> jnp.ndarray:
+    """Device-side formulation of :func:`completion_time` — the same
+    Gamma(K, 1/λ) distribution drawn from a jax key, usable inside a traced
+    round body (``repro.core.fedbuff.FedBuffDevice``). The jax and numpy
+    streams differ draw-for-draw; use the seed bridge
+    (:func:`repro.fed.engine.fedbuff_completion_table`) when bit-for-bit
+    agreement with the legacy event stream is required."""
+    return jax.random.gamma(key, jnp.asarray(local_steps, jnp.float32)) / lam
+
+
 class ArrivalQueue:
     """Min-heap of (finish_time, client) completion events.
 

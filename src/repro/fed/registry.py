@@ -20,6 +20,13 @@ harness) instead of hand-wiring a class per experiment:
   ``adaptive_quafl``  QuAFL under the adaptive bit-width controller
                       (beyond-paper); kwargs: ``lo``, ``hi``, ``b_min``,
                       ``b_max``
+  ``fedbuff_device``  FedBuff with its event state as a pure pytree
+                      (device ring buffer, jit/scan-able rounds); FedBuff
+                      kwargs plus ``completion_table`` (seed bridge)
+  ``spmd``            the mesh-sharded QuAFL train step behind the
+                      protocol (one client per mesh data slice); kwargs:
+                      ``cfg`` (ModelConfig, REQUIRED), ``mesh``, ``batch``,
+                      ``seq``, ``fed_mode``, ``transport``, ``remat``
 
 The registry is extensible: third-party variants join via
 :func:`register_algorithm` and immediately work with ``simulate()`` /
@@ -79,6 +86,20 @@ def _build_adaptive(fed, loss_fn, template, batch_fn, **kw):
     return AdaptiveQuaflAlgorithm(fed, make_alg, **kw)
 
 
+def _build_fedbuff_device(fed, loss_fn, template, batch_fn, **kw):
+    from repro.core.fedbuff import FedBuffDevice
+    return FedBuffDevice(fed=fed, loss_fn=loss_fn, template=template,
+                         batch_fn=batch_fn, **kw)
+
+
+def _build_spmd(fed, loss_fn, template, batch_fn, **kw):
+    # loss_fn/batch_fn are protocol-uniform arguments the mesh path does not
+    # consume: the train step hardwires the LM loss and samples minibatches
+    # from the token-pool `data` itself.
+    from repro.launch.spmd import SpmdAlgorithm
+    return SpmdAlgorithm(fed=fed, template=template, **kw)
+
+
 _BUILDERS: Dict[str, Callable[..., FedAlgorithm]] = {
     "quafl": _build_quafl,
     "fedavg": _build_fedavg,
@@ -86,6 +107,8 @@ _BUILDERS: Dict[str, Callable[..., FedAlgorithm]] = {
     "sequential": _build_sequential,
     "quafl_scaffold": _build_scaffold,
     "adaptive_quafl": _build_adaptive,
+    "fedbuff_device": _build_fedbuff_device,
+    "spmd": _build_spmd,
 }
 
 

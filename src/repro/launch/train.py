@@ -1,41 +1,47 @@
-"""End-to-end QuAFL training driver (runs REAL steps, not a dry-run).
+"""End-to-end training driver (runs REAL steps, not a dry-run).
 
 On this container it runs reduced/small variants on the single CPU device;
 on a pod, point --mesh-data/--mesh-model at the real topology and the same
 program distributes via GSPMD.
 
-Two execution paths:
+EVERY algorithm — including the mesh-sharded SPMD path — now runs through
+the unified registry (``repro.fed``) and the generic ``simulate()`` harness
+with the standardized metrics schema (``sim_time``, ``bits_up``,
+``bits_down``, ``h_steps_mean``, ``quant_err``):
 
-  * ``--algo spmd`` (default) — the distributed train step
-    (``launch/steps.py``): clients live on mesh slots, the quantized
-    exchange runs as mesh collectives.
-  * ``--algo quafl|fedavg|fedbuff|sequential|quafl_scaffold|adaptive_quafl``
-    — the unified algorithm registry (``repro.fed``): the named server
-    variant runs through the generic ``simulate()`` harness with the
-    standardized metrics schema (``sim_time``, ``bits_up``, ``bits_down``,
-    ``h_steps_mean``, ``quant_err``). Any registry algorithm trains any
-    architecture — the protocol only sees a params pytree.
+  * ``--algo spmd`` (default) — the distributed train step wrapped by
+    ``repro.launch.spmd.SpmdAlgorithm``: clients live on mesh slots, the
+    quantized exchange runs as mesh collectives, and the rounds land in the
+    same Trace format as the simulator algorithms.
+  * ``--algo quafl|fedavg|fedbuff|fedbuff_device|sequential|...`` — any
+    registry server variant; the protocol only sees a params pytree, so any
+    zoo architecture trains under any algorithm.
 
-Example (the (b) end-to-end driver — ~100M-param model, a few hundred rounds):
+``--scan-chunk K`` selects the device-resident scanned engine (K-round
+``lax.scan`` chunks, one host sync per chunk) for algorithms with the
+``device_round`` capability; ``--kernel-backend`` picks the compression
+pipeline's kernel implementation (jnp / pallas_interpret / pallas) on both
+execution paths.
+
+Example (the (b) end-to-end driver — ~100M-param model, a few hundred
+rounds; on the spmd path the client count IS the mesh data axis, so grow
+--mesh-data on a pod to grow the cohort):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
-      --steps 200 --batch 8 --seq 128 --n-slots 4 --log-every 20
-Registry path:
+      --steps 200 --batch 8 --seq 128 --mesh-data 1 --log-every 20
+Registry path, scanned:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
-      --algo quafl --steps 40 --batch 4 --seq 64 --n-slots 4
+      --algo quafl --steps 40 --batch 4 --seq 64 --n-slots 4 --scan-chunk 10
 """
 from __future__ import annotations
 
 import argparse
-import time
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
-from repro.configs import SHAPES, get_config, get_reduced
-from repro.configs.base import FedConfig, ShapeConfig
+from repro.configs import get_config, get_reduced
+from repro.configs.base import FedConfig
 from repro.data.synthetic import federated_token_task, lm_token_stream
-from repro.launch.steps import build_train_step, init_train_state
 from repro.models.model import lm_loss
 
 
@@ -47,13 +53,38 @@ def run_registry(args, cfg, fed, key):
     k_init, k_run = jax.random.split(key)
     params0, _ = init_lm(cfg, k_init)
     loss_fn = partial(lm_loss, cfg)
-    pool = max(4, args.local_steps) * args.batch   # per-client token pool
-    data, batch_fn = federated_token_task(args.seed, args.n_slots, pool,
+    # per-client token pool: every algorithm (spmd included) samples its
+    # minibatches with replacement from these rows, so the pool must be
+    # large enough that a multi-hundred-round run isn't memorizing a
+    # handful of sequences (the pre-refactor spmd loop generated unbounded
+    # fresh streams; --pool restores arbitrarily large pools)
+    pool = args.pool or max(256, max(4, args.local_steps) * args.batch)
+    n_clients = fed.n_clients
+
+    extra = {}
+    if args.algo in ("fedbuff", "fedbuff_device"):
+        extra = {"buffer_size": max(2, args.n_slots)}
+    elif args.algo == "spmd":
+        import dataclasses
+
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((args.mesh_data, args.mesh_model),
+                         ("data", "model"))
+        extra = {"cfg": cfg, "mesh": mesh, "batch": args.batch,
+                 "seq": args.seq, "remat": False}
+        # spmd maps ONE client per mesh data slice: the client count is
+        # --mesh-data, not --n-slots — reconcile fed and the token task
+        # loudly rather than training a silently different cohort
+        if args.n_slots != args.mesh_data:
+            print(f"[train] --algo spmd: client count comes from "
+                  f"--mesh-data ({args.mesh_data}), overriding "
+                  f"--n-slots {args.n_slots}", flush=True)
+        n_clients = args.mesh_data
+        fed = dataclasses.replace(fed, n_clients=n_clients, s=n_clients)
+
+    data, batch_fn = federated_token_task(args.seed, n_clients, pool,
                                           args.batch, args.seq,
                                           cfg.vocab_size)
-
-    extra = {"buffer_size": max(2, args.n_slots)} \
-        if args.algo == "fedbuff" else {}
     alg = make_algorithm(args.algo, fed, loss_fn=loss_fn, template=params0,
                          batch_fn=batch_fn, **extra)
     eval_toks = lm_token_stream(jax.random.PRNGKey(999), args.batch,
@@ -65,7 +96,8 @@ def run_registry(args, cfg, fed, key):
 
     def on_row(row):
         print(f"round {row['round']:5d} server_loss="
-              f"{row['server_loss']:.4f} sim_t={row['sim_time']:.0f} "
+              f"{row.get('server_loss', float('nan')):.4f} "
+              f"sim_t={row['sim_time']:.0f} "
               f"h_mean={row['h_steps_mean']:.2f} "
               f"qerr={row['quant_err']:.3e} "
               f"bits_up={row['bits_up_total']:.3g} "
@@ -74,7 +106,8 @@ def run_registry(args, cfg, fed, key):
 
     trace = simulate(alg, params0, data, k_run, rounds=args.steps,
                      eval_every=args.log_every, eval_fn=eval_fn,
-                     on_row=on_row)
+                     on_row=on_row, scan_chunk=args.scan_chunk)
+    print(f"engine={trace.engine} us_per_round={trace.us_per_round:.0f}")
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, trace.rounds,
                         alg.eval_params(trace.final_state),
@@ -83,64 +116,35 @@ def run_registry(args, cfg, fed, key):
     return trace
 
 
-def run_spmd(args, cfg, fed, key):
-    """Legacy distributed path: mesh-sharded train step."""
-    shape = ShapeConfig("cli", args.seq, args.batch * args.n_slots, "train")
-    from repro.utils.compat import make_mesh
-    mesh = make_mesh((args.mesh_data, args.mesh_model), ("data", "model"))
-
-    with mesh:
-        step, _, _ = build_train_step(cfg, fed, mesh, shape,
-                                      fed_mode="client_dp", remat=False)
-        step = jax.jit(step, donate_argnums=(0,))
-        state = init_train_state(cfg, key, args.n_slots)
-
-        def round_batch(rkey):
-            toks = []
-            for i in range(args.n_slots):
-                ks = jax.random.split(jax.random.fold_in(rkey, i),
-                                      args.local_steps)
-                toks.append(jnp.stack([
-                    lm_token_stream(ks[q], args.batch, args.seq,
-                                    cfg.vocab_size, client_id=i)
-                    for q in range(args.local_steps)]))
-            return {"tokens": jnp.stack(toks)}
-
-        eval_toks = lm_token_stream(jax.random.PRNGKey(999), args.batch,
-                                    args.seq, cfg.vocab_size, client_id=0)
-        t0 = time.time()
-        for r in range(args.steps):
-            key, kd, kr = jax.random.split(key, 3)
-            state, m = step(state, round_batch(kd), jax.random.key_data(kr))
-            if (r + 1) % args.log_every == 0 or r == 0:
-                loss, _ = lm_loss(cfg, state.server, {"tokens": eval_toks})
-                print(f"round {r+1:5d} server_loss={float(loss):.4f} "
-                      f"h_mean={float(m['h_steps_mean']):.2f} "
-                      f"qerr2={float(m['quant_err_sq']):.3e} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
-        if args.checkpoint_dir:
-            save_checkpoint(args.checkpoint_dir, args.steps, state.server,
-                            extra={"arch": cfg.name})
-            print(f"checkpoint saved to {args.checkpoint_dir}")
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--algo", default="spmd",
-                    help="'spmd' (mesh-sharded train step) or any registry "
-                         "name: quafl|fedavg|fedbuff|sequential|"
-                         "quafl_scaffold|adaptive_quafl")
+                    help="any registry name: spmd|quafl|fedavg|fedbuff|"
+                         "fedbuff_device|sequential|quafl_scaffold|"
+                         "adaptive_quafl ('spmd' = mesh-sharded train step "
+                         "behind the same protocol)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--n-slots", type=int, default=2)
+    ap.add_argument("--pool", type=int, default=0,
+                    help="token-pool rows per client (0 = auto: at least "
+                         "256; all algorithms sample minibatches from "
+                         "this finite pool)")
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--quantizer", default="lattice")
     ap.add_argument("--transport", default="dequant_psum")
+    ap.add_argument("--kernel-backend", default="jnp",
+                    choices=["jnp", "pallas_interpret", "pallas"],
+                    help="compression-pipeline kernel implementation, "
+                         "threaded through both the registry and spmd paths")
+    ap.add_argument("--scan-chunk", type=int, default=0,
+                    help=">=2 runs device_round-capable algorithms in "
+                         "K-round scanned chunks (one host sync per chunk)")
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
@@ -152,12 +156,10 @@ def main():
     fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
                     local_steps=args.local_steps, lr=args.lr,
                     bits=args.bits, quantizer=args.quantizer,
-                    transport=args.transport)
+                    transport=args.transport,
+                    kernel_backend=args.kernel_backend)
     key = jax.random.PRNGKey(args.seed)
-    if args.algo == "spmd":
-        run_spmd(args, cfg, fed, key)
-    else:
-        run_registry(args, cfg, fed, key)
+    run_registry(args, cfg, fed, key)
 
 
 if __name__ == "__main__":

@@ -108,9 +108,11 @@ def test_train_step_mean_preservation_quantfree():
 
 
 SUBPROC = r"""
+import dataclasses
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
+import numpy as np
 from repro.configs import get_reduced
 from repro.configs.base import FedConfig, ShapeConfig
 from repro.launch.steps import build_train_step, build_serve_step, \
@@ -131,6 +133,24 @@ with mesh:
     fn = jax.jit(step, in_shardings=sh)
     st2, m = fn(st, {"tokens": toks}, key)
     assert not bool(jnp.isnan(st2.server["embed/tok"]).any())
+    # shard_map x Pallas composition: the shard-local exchange through the
+    # interpreted Pallas kernels must agree with the jnp backend (ROADMAP:
+    # validate pallas_interpret under shard_map)
+    servers = {}
+    for kb in ("jnp", "pallas_interpret"):
+        fed_kb = dataclasses.replace(fed, kernel_backend=kb)
+        step_kb, _, sh_kb = build_train_step(cfg, fed_kb, mesh, shape,
+                                             fed_mode="client_dp",
+                                             transport="shard_local")
+        st_kb, m_kb = jax.jit(step_kb, in_shardings=sh_kb)(
+            st, {"tokens": toks}, key)
+        assert np.isfinite(float(m_kb["quant_err_sq"])), kb
+        servers[kb] = jax.device_get(st_kb.server)
+    for k in servers["jnp"]:
+        np.testing.assert_allclose(
+            np.asarray(servers["jnp"][k], np.float32),
+            np.asarray(servers["pallas_interpret"][k], np.float32),
+            rtol=2e-5, atol=2e-5, err_msg=k)
     # serve step lowers + compiles on the same mesh
     sshape = ShapeConfig("d", 64, 8, "decode")
     sstep, p_spec, c_spec, ssh = build_serve_step(cfg, mesh, sshape)
