@@ -9,6 +9,14 @@ over a >=1M-parameter model vector at s in {8, 32} sampled clients, for the
     composition spent ~5s+1 full-model passes),
   * analytic HBM bytes moved by the fused path vs the seed composition.
 
+**Codec dimension** (``exchange_codec_*`` rows): the same exchange under
+registry codecs — uniform 8-bit lattice, 4-bit unpacked (uint8 wire), and
+4-bit ``lattice_packed`` (2 codes/byte, packed inside the fused encode
+kernel) — with the codecs' WIRE accounting (``bits_up`` for s uplink
+messages) in the derived column. The committed baseline pins the packing
+claim: ``lattice_packed`` at b=4 carries ~2x fewer ``bits_up`` than the
+unpacked 4-bit row.
+
 CPU caveat (same as bench_kernels): interpret-mode Pallas timing is a
 correctness-validation datapoint, NOT a TPU projection — the interpreter
 executes the grid serially. The jnp rows are the regression-tracked
@@ -20,11 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.compression.codecs import make_codec
 from repro.compression.pipeline import ExchangePipeline
 from repro.compression.rotation import pad_len
 
 D_FULL = 1 << 20          # 1,048,576 >= 1M parameters
 BITS = 8
+CODEC_SPECS = ("lattice", "lattice:bits=4", "lattice_packed:bits=4")
 
 
 def _traffic_bytes(d_pad: int, s: int, fused: bool) -> int:
@@ -65,6 +75,32 @@ def bench_round(d: int, s: int, backend: str, reps: int):
          f"bytes_seed={_traffic_bytes(d_pad, s, False):.3g}")
 
 
+def bench_codec_round(d: int, s: int, spec: str, backend: str, reps: int):
+    """One full exchange under a registry codec's wire format; the derived
+    column carries the codec-computed uplink accounting."""
+    codec = make_codec(spec, bits=BITS, backend=backend)
+    key = jax.random.PRNGKey(0)
+    server = jax.random.normal(key, (d,))
+    Y = server[None] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (s, d))
+    hints = jnp.linalg.norm(Y - server[None], axis=1) + 1e-8
+    pipe = ExchangePipeline(bits=codec.bits, block=codec.block,
+                            safety=codec.safety, backend=backend)
+    wire = codec.wire()
+    fn = jax.jit(lambda k, srv, y, h: pipe.quafl_round(k, srv, y, h,
+                                                       up=wire, down=wire))
+    jax.block_until_ready(fn(key, server, Y, hints))      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(key, server, Y, hints))
+    us = (time.time() - t0) / reps * 1e6
+    bits_up = s * codec.message_bits(d)
+    name = spec.replace(":", "_").replace("=", "")
+    emit(f"exchange_codec_{name}_d{d}_s{s}_{backend}", us,
+         f"bits_up={bits_up};bits_per_coord={codec.message_bits(d) / d:.3f};"
+         f"pack={codec.pack}")
+
+
 def main(quick: int = 0):
     d = (1 << 17) if quick else D_FULL
     for s in (8, 32):
@@ -72,6 +108,13 @@ def main(quick: int = 0):
         # number is a validation datapoint, not a projection
         bench_round(d, s, "jnp", reps=3)
         bench_round(d, s, "pallas_interpret", reps=1)
+    # codec dimension: wire formats over the same exchange (jnp rows are
+    # the regression-tracked numbers; one packed pallas_interpret row
+    # validates the in-kernel pack/unpack path)
+    for spec in CODEC_SPECS:
+        bench_codec_round(d, 8, spec, "jnp", reps=2)
+    bench_codec_round(d, 8, "lattice_packed:bits=4", "pallas_interpret",
+                      reps=1)
 
 
 if __name__ == "__main__":

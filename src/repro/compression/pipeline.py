@@ -52,7 +52,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +61,26 @@ import numpy as np
 from repro.compression.rotation import (DEFAULT_BLOCK, _signs,
                                         hadamard_matrix, pad_len)
 from repro.kernels.exchange import (block_geometry, fused_decode,
-                                    fused_encode, fused_rotate,
-                                    quantize_codes, snap_codes)
+                                    fused_encode, fused_rotate, pack_codes,
+                                    quantize_codes, snap_codes, unpack_codes)
 
 BACKENDS = ("jnp", "pallas_interpret", "pallas")
+
+
+class LatticeWire(NamedTuple):
+    """Per-direction wire parametrization of the lattice exchange.
+
+    ``bits`` is the static bit-width (kernel wrap/pack parameter);
+    ``pack = 8 // bits`` ships that many codes per byte (the
+    ``lattice_packed`` codec; 1 = historical unpacked layout); ``levels``
+    optionally carries PER-MESSAGE quantization levels (a (m,) f32 array of
+    powers of two <= 2^bits) for heterogeneous per-client bit budgets —
+    supported by the ``jnp`` backend only, since the Pallas kernels bake the
+    wrap modulus statically.
+    """
+    bits: int
+    pack: int = 1
+    levels: Any = None
 
 # fp32 precision floor: the modulo decode needs y/γ (and w/γ) to keep
 # sub-integer precision, so γ must not drop below max|rot(x)|·2^-18. The
@@ -86,16 +102,20 @@ def coord_bound(norms, d_pad: int):
             * (np.sqrt(2 * np.log(2 * d_pad + 1)) + 2.0))
 
 
-def wrap_gamma(dist_hint, d: int, *, bits: int, block: int = DEFAULT_BLOCK,
-               safety: float = 8.0):
+def wrap_gamma(dist_hint, d: int, *, bits: int = None, levels=None,
+               block: int = DEFAULT_BLOCK, safety: float = 8.0):
     """Per-message lattice scale from the encoder-local distance hint.
 
     After rotation the difference coordinates are subgaussian with scale
     dist/sqrt(d_pad); the wrap window 2^b·γ must exceed twice the max
-    coordinate. Vectorized over ``dist_hint``.
+    coordinate. Vectorized over ``dist_hint``; ``levels`` (scalar or a
+    per-message array, default ``1 << bits``) supports heterogeneous
+    bit-widths within one batched call.
     """
+    if levels is None:
+        levels = 1 << bits
     d_pad = pad_len(d, block)
-    gamma = safety * 2.0 * coord_bound(dist_hint, d_pad) / (1 << bits)
+    gamma = safety * 2.0 * coord_bound(dist_hint, d_pad) / levels
     return jnp.maximum(gamma, 1e-12)
 
 
@@ -104,14 +124,31 @@ def wrap_gamma(dist_hint, d: int, *, bits: int, block: int = DEFAULT_BLOCK,
 # ---------------------------------------------------------------------------
 
 class Backend(NamedTuple):
-    """The five primitive ops; every op is batched over a message axis."""
+    """The five primitive ops; every op is batched over a message axis.
+
+    The quantizing ops additionally take ``pack`` (sub-byte packed codes,
+    :mod:`repro.kernels.exchange` layout) and ``levels2`` (optional
+    per-message quantization levels for heterogeneous bit budgets; ``jnp``
+    backend only — the Pallas kernels bake the wrap modulus statically).
+    """
     name: str
     rotate: Callable    # (x2, signs, *, block, inverse) -> y2
     encode: Callable    # (x2, signs, u2, gammas, *, bits, block,
-                        #  want_rotated) -> codes | (rotated, codes)
-    quantize: Callable  # (y2_rotated, u2, gammas, *, bits, block) -> codes
-    snap: Callable      # (codes2, wrot2, gammas, *, bits, block) -> q2
-    decode: Callable    # (codes2, ref2, signs, gammas, *, bits, block) -> x2
+                        #  want_rotated, pack, levels2)
+                        #  -> codes | (rotated, codes)
+    quantize: Callable  # (y2_rotated, u2, gammas, *, bits, block, pack,
+                        #  levels2) -> codes
+    snap: Callable      # (codes2, wrot2, gammas, *, bits, block, pack,
+                        #  levels2) -> q2
+    decode: Callable    # (codes2, ref2, signs, gammas, *, bits, block,
+                        #  pack, levels2) -> x2
+
+
+def _levels_jnp(bits, levels2):
+    """The wrap modulus: the static 2^bits, or per-message (m, 1) rows."""
+    if levels2 is None:
+        return 1 << bits
+    return jnp.asarray(levels2, jnp.float32).reshape(-1, 1)
 
 
 def _rotate_jnp(x2, signs, *, block=DEFAULT_BLOCK, inverse=False):
@@ -131,42 +168,65 @@ def _rotate_jnp(x2, signs, *, block=DEFAULT_BLOCK, inverse=False):
 
 
 def _encode_jnp(x2, signs, u2, gammas, *, bits=8, block=DEFAULT_BLOCK,
-                want_rotated=False):
+                want_rotated=False, pack=1, levels2=None):
     y = _rotate_jnp(x2, signs, block=block)
     g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
     codes = jnp.mod(jnp.floor(y / g + u2),
-                    1 << bits).astype(jnp.uint32)
+                    _levels_jnp(bits, levels2)).astype(jnp.uint32)
+    if pack > 1:
+        codes = pack_codes(codes, bits=bits, block=block)
     return (y, codes) if want_rotated else codes
 
 
-def _quantize_jnp(y2, u2, gammas, *, bits=8, block=DEFAULT_BLOCK):
+def _quantize_jnp(y2, u2, gammas, *, bits=8, block=DEFAULT_BLOCK, pack=1,
+                  levels2=None):
     g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
-    return jnp.mod(jnp.floor(y2.astype(jnp.float32) / g + u2),
-                   1 << bits).astype(jnp.uint32)
+    codes = jnp.mod(jnp.floor(y2.astype(jnp.float32) / g + u2),
+                    _levels_jnp(bits, levels2)).astype(jnp.uint32)
+    if pack > 1:
+        codes = pack_codes(codes, bits=bits, block=block)
+    return codes
 
 
-def _snap_jnp(codes2, wrot2, gammas, *, bits=8, block=DEFAULT_BLOCK):
-    levels = 1 << bits
+def _snap_jnp(codes2, wrot2, gammas, *, bits=8, block=DEFAULT_BLOCK, pack=1,
+              levels2=None):
+    if pack > 1:
+        codes2 = unpack_codes(codes2, bits=bits, block=block)
+    levels = _levels_jnp(bits, levels2)
     cc = codes2.astype(jnp.float32)
     g = jnp.asarray(gammas, jnp.float32).reshape(-1, 1)
     q = cc + levels * jnp.round((wrot2 / g - cc) / levels)
     return q * g
 
 
-def _decode_jnp(codes2, ref2, signs, gammas, *, bits=8, block=DEFAULT_BLOCK):
+def _decode_jnp(codes2, ref2, signs, gammas, *, bits=8, block=DEFAULT_BLOCK,
+                pack=1, levels2=None):
     w = _rotate_jnp(ref2, signs, block=block)
-    xr = _snap_jnp(codes2, w, gammas, bits=bits, block=block)
+    xr = _snap_jnp(codes2, w, gammas, bits=bits, block=block, pack=pack,
+                   levels2=levels2)
     return _rotate_jnp(xr, signs, block=block, inverse=True)
+
+
+def _no_levels(fn, name):
+    """Pallas ops reject per-message levels (static wrap modulus)."""
+    def wrapped(*args, levels2=None, **kw):
+        if levels2 is not None:
+            raise NotImplementedError(
+                f"per-message levels (heterogeneous bit-widths) are only "
+                f"supported by the 'jnp' backend, not {name!r}")
+        return fn(*args, **kw)
+    return wrapped
 
 
 def _pallas_backend(name: str, interpret: bool) -> Backend:
     return Backend(
         name=name,
         rotate=partial(fused_rotate, interpret=interpret),
-        encode=partial(fused_encode, interpret=interpret),
-        quantize=partial(quantize_codes, interpret=interpret),
-        snap=partial(snap_codes, interpret=interpret),
-        decode=partial(fused_decode, interpret=interpret),
+        encode=_no_levels(partial(fused_encode, interpret=interpret), name),
+        quantize=_no_levels(partial(quantize_codes, interpret=interpret),
+                            name),
+        snap=_no_levels(partial(snap_codes, interpret=interpret), name),
+        decode=_no_levels(partial(fused_decode, interpret=interpret), name),
     )
 
 
@@ -227,12 +287,16 @@ class ExchangePipeline:
     def signs_for(self, krot, d: int):
         return _signs(krot, pad_len(d, self.block))
 
-    def gammas(self, dist_hints, xnorms, d: int):
+    def _wire(self, wire: LatticeWire) -> LatticeWire:
+        return wire if wire is not None else LatticeWire(self.bits)
+
+    def gammas(self, dist_hints, xnorms, d: int, wire: LatticeWire = None):
         """Wrap-window γ from the distance hint, floored at the fp32
         precision limit of the message's own rotated coordinates (estimated
         pre-rotation from ‖x‖ so it fuses with the encode kernel)."""
-        base = wrap_gamma(dist_hints, d, bits=self.bits, block=self.block,
-                          safety=self.safety)
+        wire = self._wire(wire)
+        base = wrap_gamma(dist_hints, d, bits=wire.bits, levels=wire.levels,
+                          block=self.block, safety=self.safety)
         floor = coord_bound(xnorms, pad_len(d, self.block)) * GAMMA_NORM_FLOOR
         return jnp.maximum(base, floor)
 
@@ -241,34 +305,44 @@ class ExchangePipeline:
         self.stats.fwd += int(x2.shape[0])
         return self.ops.rotate(self._pad(x2), signs, block=self.block)
 
-    def rotate_encode(self, x2, signs, u2, gammas, *, want_rotated=True):
+    def rotate_encode(self, x2, signs, u2, gammas, *, want_rotated=True,
+                      wire: LatticeWire = None):
+        wire = self._wire(wire)
         self.stats.fwd += int(x2.shape[0])
         return self.ops.encode(self._pad(x2), signs, u2, gammas,
-                               bits=self.bits, block=self.block,
-                               want_rotated=want_rotated)
+                               bits=wire.bits, block=self.block,
+                               want_rotated=want_rotated, pack=wire.pack,
+                               levels2=wire.levels)
 
-    def quantize(self, y2_rot, u2, gammas):
+    def quantize(self, y2_rot, u2, gammas, wire: LatticeWire = None):
         """Elementwise encode of ALREADY-ROTATED coords — no rotation pass
         (and no ``stats.fwd`` increment): stochastic round + wrap only."""
-        return self.ops.quantize(y2_rot, u2, gammas, bits=self.bits,
-                                 block=self.block)
+        wire = self._wire(wire)
+        return self.ops.quantize(y2_rot, u2, gammas, bits=wire.bits,
+                                 block=self.block, pack=wire.pack,
+                                 levels2=wire.levels)
 
-    def snap(self, codes2, wrot2, gammas):
-        return self.ops.snap(codes2, wrot2, gammas, bits=self.bits,
-                             block=self.block)
+    def snap(self, codes2, wrot2, gammas, wire: LatticeWire = None):
+        wire = self._wire(wire)
+        return self.ops.snap(codes2, wrot2, gammas, bits=wire.bits,
+                             block=self.block, pack=wire.pack,
+                             levels2=wire.levels)
 
     def unrotate(self, y2, signs, d: int):
         self.stats.inv += int(y2.shape[0])
         return self.ops.rotate(y2, signs, block=self.block,
                                inverse=True)[:, :d]
 
-    def decode(self, codes2, ref2, signs, gammas, d: int):
+    def decode(self, codes2, ref2, signs, gammas, d: int,
+               wire: LatticeWire = None):
         """Full fused Dec(ref, msg): rotate ref + snap + inverse rotate."""
+        wire = self._wire(wire)
         m = max(codes2.shape[0], ref2.shape[0])
         self.stats.fwd += int(ref2.shape[0])
         self.stats.inv += m
         return self.ops.decode(codes2, self._pad(ref2), signs, gammas,
-                               bits=self.bits, block=self.block)[:, :d]
+                               bits=wire.bits, block=self.block,
+                               pack=wire.pack, levels2=wire.levels)[:, :d]
 
     # -- per-round key/noise derivation (shared with the reference path) ----
     def _round_randomness(self, key, s: int, d: int):
@@ -284,24 +358,29 @@ class ExchangePipeline:
     # ------------------------------------------------------------------
     # one full QuAFL exchange, entirely in rotated coordinates
     # ------------------------------------------------------------------
-    def quafl_round(self, key, server, Y, hints_up, *, avg_mode="both"):
+    def quafl_round(self, key, server, Y, hints_up, *, avg_mode="both",
+                    up: LatticeWire = None, down: LatticeWire = None):
         """Quantized exchange + (s+1)-averaging of one server round.
 
         server: (d,) X_t; Y: (s, d) client models at poll time; hints_up:
-        (s,) upper estimates of ‖Y^i − X_t‖. Returns (server_new (d,),
-        clients_new (s, d), hint_srv, rel_err) — hint_srv is the downlink
-        wrap hint (feeds ``srv_dist_est``), rel_err the mean relative
-        quantization error of the uplink.
+        (s,) upper estimates of ‖Y^i − X_t‖. ``up`` / ``down`` select the
+        per-direction wire format (bit-width, sub-byte packing, optional
+        per-message levels for heterogeneous client bit budgets); both
+        default to this pipeline's uniform ``bits``. Returns (server_new
+        (d,), clients_new (s, d), hint_srv, rel_err) — hint_srv is the
+        downlink wrap hint (feeds ``srv_dist_est``), rel_err the mean
+        relative quantization error of the uplink.
         """
         s, d = Y.shape
+        up, down = self._wire(up), self._wire(down)
         signs, u_cl, u_srv = self._round_randomness(key, s, d)
 
         # uplink: fused rotate+encode of every client message; the rotated
         # coords come back for free and serve as downlink decode references.
-        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d)
-        Y_rot, codes_up = self.rotate_encode(Y, signs, u_cl, gam_up)
+        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d, up)
+        Y_rot, codes_up = self.rotate_encode(Y, signs, u_cl, gam_up, wire=up)
         srv_rot = self.rotate(server[None], signs)
-        QY_rot = self.snap(codes_up, srv_rot, gam_up)          # (s, d_pad)
+        QY_rot = self.snap(codes_up, srv_rot, gam_up, up)      # (s, d_pad)
 
         # downlink: the server's γ depends on the decoded uplink, so its
         # encode cannot fold into the srv_rot pass above — but rot(X_t) is
@@ -309,9 +388,10 @@ class ExchangePipeline:
         # quantize of the cached coords (no second rotation pass; the round
         # budget is s+1 forward rotations, down from s+2).
         hint_srv = jnp.max(jnp.linalg.norm(QY_rot - srv_rot, axis=1)) + 1e-8
-        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None], d)
-        codes_dn = self.quantize(srv_rot, u_srv, gam_dn)
-        QX_rot = self.snap(codes_dn, Y_rot, gam_dn)            # (s, d_pad)
+        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None],
+                             d, down)
+        codes_dn = self.quantize(srv_rot, u_srv, gam_dn, down)
+        QX_rot = self.snap(codes_dn, Y_rot, gam_dn, down)      # (s, d_pad)
 
         # (s+1)-averaging in rotated coordinates; inverse-rotate only the
         # final states.
@@ -334,30 +414,37 @@ class ExchangePipeline:
     # equivalence oracle: per-message materialize-everything composition
     # ------------------------------------------------------------------
     def quafl_round_reference(self, key, server, Y, hints_up, *,
-                              avg_mode="both"):
+                              avg_mode="both", up: LatticeWire = None,
+                              down: LatticeWire = None):
         """Same exchange over the same keys/noise/γ, composed message by
         message in original coordinates (the seed's structure). Used by the
         tests to pin the rotated-space path; O(s) extra rotation passes."""
         s, d = Y.shape
+        up, down = self._wire(up), self._wire(down)
         signs, u_cl, u_srv = self._round_randomness(key, s, d)
         rot = partial(_rotate_jnp, block=self.block)
         unrot = partial(_rotate_jnp, block=self.block, inverse=True)
 
-        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d)
+        gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d, up)
         Yp = self._pad(Y)
         srvp = self._pad(server[None])
-        codes_up = _encode_jnp(Yp, signs, u_cl, gam_up, bits=self.bits,
-                               block=self.block)
+        codes_up = _encode_jnp(Yp, signs, u_cl, gam_up, bits=up.bits,
+                               block=self.block, pack=up.pack,
+                               levels2=up.levels)
         # each message decoded separately against the server (full rotate /
         # snap / inverse-rotate per message), back in original space
         QY = unrot(_snap_jnp(codes_up, rot(srvp, signs), gam_up,
-                             bits=self.bits), signs)
+                             bits=up.bits, block=self.block, pack=up.pack,
+                             levels2=up.levels), signs)
         hint_srv = jnp.max(jnp.linalg.norm(QY - srvp, axis=1)) + 1e-8
-        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None], d)
-        codes_dn = _encode_jnp(srvp, signs, u_srv, gam_dn, bits=self.bits,
-                               block=self.block)
+        gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None],
+                             d, down)
+        codes_dn = _encode_jnp(srvp, signs, u_srv, gam_dn, bits=down.bits,
+                               block=self.block, pack=down.pack,
+                               levels2=down.levels)
         QX = unrot(_snap_jnp(codes_dn, rot(Yp, signs), gam_dn,
-                             bits=self.bits), signs)
+                             bits=down.bits, block=self.block,
+                             pack=down.pack, levels2=down.levels), signs)
 
         if avg_mode in ("both", "server_only"):
             srv_new = (srvp[0] + jnp.sum(QY, 0)) / (s + 1)

@@ -1,0 +1,178 @@
+"""Transport protocol: HOW the uplink aggregate moves over the mesh.
+
+A codec decides what one message looks like; a transport decides how the
+client-sum collective of the shard-local exchange
+(:mod:`repro.core.exchange_local`) is carried over the interconnect. All
+three strategies compute the SAME aggregate (they are pinned against each
+other in ``tests/test_distributed.py``); they differ only in which bytes
+cross the wire:
+
+  ``shard_local``     decode/snap locally, all-reduce fp32 partial sums —
+                      the faithful reading of Alg. 1 line 8 on a pod
+                      (legacy name ``dequant_psum``)
+  ``code_allgather``  all-gather the PACKED codec codes (uint8/16 — or the
+                      sub-byte ``lattice_packed`` bytes, at b=4 HALF the
+                      unpacked payload) + decode every message locally
+  ``reduce_scatter``  NEW: snap locally in rotated space, ``psum_scatter``
+                      the snapped chunks over the client axis, then
+                      all-gather the reduced shards — the ROADMAP fusion
+                      item: the reduce phase moves (n-1)/n · d words where
+                      the fp32 all-reduce moves 2·(n-1)/n · d, halving the
+                      uplink payload of the collective
+
+Each transport exposes ``lattice_sum`` (rotated-space fused path) and
+``generic_sum`` (per-message codec path). The registry mirrors
+the codec/algorithm registries: select by name
+(``FedConfig.transport = "shard_local_rs"`` maps here via
+:func:`transport_for_mode`), extend via :func:`register_transport`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Structural type of a registered uplink-aggregation strategy."""
+
+    def lattice_sum(self, pipe, wire, codes, gammas, srv_rot, qy_own,
+                    client_axis, in_mesh, code_dtype):
+        ...
+
+    def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
+                    in_mesh, n_slots):
+        ...
+
+
+def _psum_maybe(x, axis, in_mesh):
+    return jax.lax.psum(x, axis) if in_mesh else x
+
+
+@dataclass(frozen=True)
+class ShardLocalPsum:
+    """fp32 all-reduce of locally decoded/snapped messages."""
+    name: str = "shard_local"
+
+    def lattice_sum(self, pipe, wire, codes, gammas, srv_rot, qy_own,
+                    client_axis, in_mesh, code_dtype):
+        return _psum_maybe(qy_own, client_axis, in_mesh)
+
+    def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
+                    in_mesh, n_slots):
+        return _psum_maybe(qy_own, client_axis, in_mesh)
+
+
+@dataclass(frozen=True)
+class CodeAllgather:
+    """All-gather packed codes along the client axis; decode locally.
+
+    Moves ``codec.message_bits`` per client over the interconnect instead
+    of d fp32 words — with the ``lattice_packed`` codec the gathered bytes
+    shrink by the packing factor too.
+    """
+    name: str = "code_allgather"
+
+    def lattice_sum(self, pipe, wire, codes, gammas, srv_rot, qy_own,
+                    client_axis, in_mesh, code_dtype):
+        if not in_mesh:
+            return qy_own
+        codes_all = jax.lax.all_gather(codes[0].astype(code_dtype),
+                                       client_axis)
+        gam_all = jax.lax.all_gather(gammas[0], client_axis)
+        return jnp.sum(pipe.snap(codes_all, srv_rot, gam_all, wire), 0,
+                       keepdims=True)
+
+    def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
+                    in_mesh, n_slots):
+        if not in_mesh:
+            return qy_own
+        # gather every message leaf (codes, scales, indices, ...) so ANY
+        # codec's wire format rides this transport
+        msg_all = jax.tree_util.tree_map(
+            lambda a: jax.lax.all_gather(a, client_axis), msg)
+        qy_sum = jnp.zeros_like(srv)
+        for j in range(n_slots):
+            m_j = jax.tree_util.tree_map(lambda a: a[j], msg_all)
+            qy_sum = qy_sum + quant.decode(key, m_j, srv)
+        return qy_sum
+
+
+@dataclass(frozen=True)
+class ReduceScatterSum:
+    """Reduce-scatter the snapped rotated chunks, then all-gather shards.
+
+    ``psum = reduce_scatter + all_gather``; carrying the sum as an explicit
+    reduce-scatter halves the payload of the reducing phase and leaves the
+    summed shards in place for a future scattered downlink encode (ROADMAP:
+    "fuse the uplink snap into the psum"). Falls back to the plain psum
+    when the chunk length does not tile over the client axis.
+    """
+    name: str = "reduce_scatter"
+
+    @staticmethod
+    def _rs_ag(x, axis, n):
+        d = x.shape[-1]
+        if n <= 1 or d % n:
+            return jax.lax.psum(x, axis)
+        shard = jax.lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 1,
+                                     tiled=True)
+        return jax.lax.all_gather(shard, axis, axis=x.ndim - 1, tiled=True)
+
+    def lattice_sum(self, pipe, wire, codes, gammas, srv_rot, qy_own,
+                    client_axis, in_mesh, code_dtype):
+        if not in_mesh:
+            return qy_own
+        return self._rs_ag(qy_own, client_axis,
+                           jax.lax.psum(1, client_axis))
+
+    def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
+                    in_mesh, n_slots):
+        if not in_mesh:
+            return qy_own
+        return self._rs_ag(qy_own, client_axis, n_slots)
+
+
+_TRANSPORTS: Dict[str, object] = {
+    "shard_local": ShardLocalPsum(),
+    "code_allgather": CodeAllgather(),
+    "reduce_scatter": ReduceScatterSum(),
+}
+
+# FedConfig.transport strings -> (runs the shard_map exchange?, registry
+# name of the client-sum strategy). dequant_psum / code_allgather keep the
+# legacy vmap composition in repro.launch.steps; the shard_local* family
+# runs repro.core.exchange_local with the named strategy.
+_MODE_MAP: Dict[str, str] = {
+    "shard_local": "shard_local",
+    "dequant_psum": "shard_local",
+    "shard_local_codes": "code_allgather",
+    "shard_local_rs": "reduce_scatter",
+}
+
+
+def registered_transports() -> Tuple[str, ...]:
+    return tuple(_TRANSPORTS)
+
+
+def register_transport(name: str, transport) -> None:
+    if name in _TRANSPORTS:
+        raise ValueError(f"transport {name!r} already registered")
+    _TRANSPORTS[name] = transport
+
+
+def make_transport(name: str):
+    if name not in _TRANSPORTS:
+        raise ValueError(f"unknown transport {name!r}; choose from "
+                         f"{sorted(_TRANSPORTS)}")
+    return _TRANSPORTS[name]
+
+
+def transport_for_mode(fed_transport: str):
+    """Map a ``FedConfig.transport`` string onto the shard-local exchange's
+    client-sum strategy (``None`` = the transport is not a shard_map one)."""
+    name = _MODE_MAP.get(fed_transport)
+    return make_transport(name) if name is not None else None

@@ -166,6 +166,13 @@ class FedConfig:
     weighted: bool = False         # eta_i = H_min / H_i dampening
     quantizer: str = "lattice"     # 'lattice' | 'qsgd' | 'none'
     bits: int = 8
+    # per-direction codec specs (repro.compression.codecs registry names,
+    # e.g. 'lattice_packed', 'scalar:bits=4', 'topk_ef:frac=0.01'); ""
+    # derives the historical scheme from `quantizer` + `bits` — every
+    # registry algorithm resolves its uplink/downlink compression from
+    # these unless given explicit uplink=/downlink= kwargs
+    codec_up: str = ""
+    codec_down: str = ""
     # compression-pipeline kernel backend (repro.compression.pipeline):
     #  'jnp'              — pure-jnp composition (CPU CI default)
     #  'pallas_interpret' — Pallas kernels through the interpreter (CPU

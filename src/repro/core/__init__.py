@@ -3,7 +3,8 @@ compared against (FedAvg, FedBuff, sequential) and the beyond-paper
 extensions. Every class implements the :class:`repro.fed.FedAlgorithm`
 protocol; prefer selecting by name via ``repro.fed.make_algorithm``."""
 from repro.core.quafl import QuAFL, QuaflState, client_speeds, expected_steps  # noqa: F401
-from repro.core.fedavg import FedAvg, FedAvgState  # noqa: F401
+from repro.core.fedavg import (CompressedFedAvg,  # noqa: F401
+                               CompressedFedAvgState, FedAvg, FedAvgState)
 from repro.core.fedbuff import (FedBuff, FedBuffDevice,  # noqa: F401
                                 FedBuffDeviceState, FedBuffState)
 from repro.core.baseline import BaselineState, Sequential  # noqa: F401

@@ -12,27 +12,32 @@ model-axis index so codes stay decodable across the client axis), and the
 only collectives left are the ones the ALGORITHM requires:
 
   * hint psums (scalar per leaf),
-  * the client-sum for the server update — fp32 psum over the client axis
-    ('dequant_psum') or an all-gather of packed uint codes + local decode
-    ('code_allgather').
+  * the client-sum for the server update, carried by a pluggable
+    :class:`repro.compression.transports.Transport` strategy — fp32 psum
+    (``shard_local``), an all-gather of the packed codec codes
+    (``code_allgather``; with ``lattice_packed`` the gathered bytes shrink
+    by the packing factor), or the new ``reduce_scatter`` path that
+    psum-scatters the SNAPPED rotated chunks and all-gathers the reduced
+    shards (the ROADMAP "fuse the uplink snap into the psum" item: the
+    reducing phase moves half the all-reduce payload).
 
 Semantics are an exact instance of Alg. 1 with a different (shard-aligned)
-rotation block partition.
+rotation block partition; all transports compute the same aggregate.
 
-Perf (this PR): the lattice path now runs ROTATED-SPACE through the
-compression pipeline — 3 forward passes per chunk (the fused
-rotate+encode of the client update Y, the server rotation that serves as
-the uplink decode reference, and the server's fused downlink encode,
-whose γ depends on the decoded uplink), every snap/sum happens on rotated
-coordinates via the fused kernels, and only the two new states are
-inverse-rotated (2 passes). The downlink Enc(X_t) is decoded against the
+Compression is codec-composable: ``quant_up`` / ``quant_down`` are
+:mod:`repro.compression.codecs` objects resolved per direction. A
+lattice-family pair runs the ROTATED-SPACE path through the compression
+pipeline — 3 forward passes per chunk (the fused rotate+encode of the
+client update Y, the server rotation that serves as the uplink decode
+reference, and the server's fused downlink encode, whose γ depends on the
+decoded uplink), every snap/sum on rotated coordinates via the fused
+kernels, only the two new states inverse-rotated (2 passes); the per-
+direction wire descriptors thread bit-widths and sub-byte packing into the
+kernels. Any other codec pair runs the per-message composition with the
+same collective structure. The downlink Enc(X_t) is decoded against the
 client's CURRENT model Y^i — the same reference rule as the flat
-simulator's pipeline.quafl_round, and the model the client actually holds
-at decode time — so the pre-round state X^i needs no rotation at all.
-The seed composition re-rotated the reference inside every decode:
-4 + 2·n_slots passes on the codes transport. The rounding noise is now
-folded with the client index (the seed reused one noise vector across the
-client axis); rotation keys remain shared across clients so codes stay
+simulator's pipeline.quafl_round. Rounding noise is folded with the client
+index; rotation keys remain shared across clients so codes stay
 cross-decodable.
 """
 from __future__ import annotations
@@ -43,7 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.compression.lattice import LatticeQuantizer
+from repro.compression.codecs import is_lattice_family
 from repro.compression.pipeline import ExchangePipeline
 from repro.utils.compat import shard_map
 from repro.utils.tree import fold_in_str
@@ -55,18 +60,29 @@ def _pad1024(x):
     return (jnp.pad(x, (0, pad)) if pad else x), d
 
 
-def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
+def make_shardlocal_exchange(quant_up, quant_down, mesh,
+                             srv_pspecs: Dict[str, P],
                              cl_pspecs: Dict[str, P], client_axis: str,
-                             n_slots: int, codes_transport: bool):
+                             n_slots: int, transport):
     """Returns exchange(server, clients, Ys, key) -> (server_new,
-    clients_new, qerr) with all quantization math device-local."""
+    clients_new, qerr) with all quantization math device-local.
+
+    ``quant_up`` / ``quant_down`` are per-direction codecs;
+    ``transport`` a :class:`repro.compression.transports.Transport`
+    carrying the uplink client-sum collective.
+    """
     mesh_axes = list(mesh.shape.keys())
     model_axes = tuple(a for a in mesh_axes if a != client_axis)
     client_in_mesh = client_axis in mesh.shape
     denom = n_slots + 1
-    pipe = (ExchangePipeline(bits=quant.bits, block=quant.block,
-                             safety=quant.safety, backend=quant.backend)
-            if isinstance(quant, LatticeQuantizer) else None)
+    lattice_pair = (is_lattice_family(quant_up)
+                    and is_lattice_family(quant_down))
+    pipe = (ExchangePipeline(bits=quant_up.bits, block=quant_up.block,
+                             safety=quant_up.safety,
+                             backend=quant_up.backend)
+            if lattice_pair else None)
+    wire_up = quant_up.wire() if lattice_pair else None
+    wire_dn = quant_down.wire() if lattice_pair else None
 
     def _psum_norm(sq, axes):
         for a in axes:
@@ -86,25 +102,22 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
         # hints: ||Y - X^i|| over the model axes (client-local value)
         h_up = _psum_norm(jnp.sum(jnp.square(y - cl_flat)),
                           model_axes) + 1e-8
-        gam_up = pipe.gammas(h_up[None], jnp.linalg.norm(y)[None], d)
+        gam_up = pipe.gammas(h_up[None], jnp.linalg.norm(y)[None], d,
+                             wire_up)
         u_up = jax.random.uniform(
             jax.random.fold_in(jax.random.split(k_up)[1], kk_cl),
             (1, d_pad), jnp.float32)
-        y_rot, codes = pipe.rotate_encode(y[None], signs, u_up, gam_up)
+        y_rot, codes = pipe.rotate_encode(y[None], signs, u_up, gam_up,
+                                          wire=wire_up)
         srv_rot = pipe.rotate(srv[None], signs)
-        qy_own = pipe.snap(codes, srv_rot, gam_up)                # rotated
-        if codes_transport and client_in_mesh:
-            # move b-bit codes over the interconnect, not the kernels'
-            # uint32 working dtype (the whole point of this transport)
-            codes_all = jax.lax.all_gather(
-                codes[0].astype(quant.code_dtype()), client_axis)
-            gam_all = jax.lax.all_gather(gam_up[0], client_axis)
-            qy_sum = jnp.sum(pipe.snap(codes_all, srv_rot, gam_all), 0,
-                             keepdims=True)
-        else:
-            qy_sum = qy_own
-            if client_in_mesh:
-                qy_sum = jax.lax.psum(qy_own, client_axis)
+        qy_own = pipe.snap(codes, srv_rot, gam_up, wire_up)      # rotated
+        # client-sum strategy: the pluggable transport decides which bytes
+        # cross the interconnect (fp32 partials, packed codes, or
+        # reduce-scattered snapped chunks)
+        qy_sum = transport.lattice_sum(pipe, wire_up, codes, gam_up,
+                                       srv_rot, qy_own, client_axis,
+                                       client_in_mesh,
+                                       quant_up.code_dtype())
         srv_new_rot = (srv_rot + qy_sum) / denom
 
         # server -> client: encode once (same on every client slice),
@@ -114,12 +127,12 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
         if client_in_mesh:
             h_dn = jax.lax.pmax(h_dn, client_axis)
         gam_dn = pipe.gammas(2.0 * h_dn[None] + 1e-8,
-                             jnp.linalg.norm(srv)[None], d)
+                             jnp.linalg.norm(srv)[None], d, wire_dn)
         u_dn = jax.random.uniform(jax.random.split(k_dn)[1], (1, d_pad),
                                   jnp.float32)
         codes_dn = pipe.rotate_encode(srv[None], signs, u_dn, gam_dn,
-                                      want_rotated=False)
-        qx_rot = pipe.snap(codes_dn, y_rot, gam_dn)
+                                      want_rotated=False, wire=wire_dn)
+        qx_rot = pipe.snap(codes_dn, y_rot, gam_dn, wire_dn)
         cl_new_rot = qx_rot / denom + n_slots * y_rot / denom
 
         srv_new = pipe.unrotate(srv_new_rot, signs, d)[0]
@@ -128,32 +141,24 @@ def make_shardlocal_exchange(quant, mesh, srv_pspecs: Dict[str, P],
         return srv_new, cl_new, qerr
 
     def _generic_leaf(kk, srv, y, cl_flat):
-        """Per-message composition for quantizers without a rotation."""
+        """Per-message composition for codec pairs without a shared
+        rotation structure (scalar / identity / top-k / mixed)."""
         h_up = _psum_norm(jnp.sum(jnp.square(y - cl_flat)),
                           model_axes) + 1e-8
         k_up = jax.random.fold_in(kk, 1)
-        msg = quant.encode(k_up, y, h_up)
-        if codes_transport and client_in_mesh:
-            codes_all = jax.lax.all_gather(msg.codes, client_axis)
-            gam_all = jax.lax.all_gather(msg.gamma, client_axis)
-            qy_sum = jnp.zeros_like(srv)
-            for j in range(n_slots):
-                m_j = type(msg)(codes=codes_all[j], gamma=gam_all[j])
-                qy_sum = qy_sum + quant.decode(k_up, m_j, srv)
-            qy_own = quant.decode(k_up, msg, srv)
-        else:
-            qy_own = quant.decode(k_up, msg, srv)
-            qy_sum = qy_own
-            if client_in_mesh:
-                qy_sum = jax.lax.psum(qy_own, client_axis)
+        msg = quant_up.encode(k_up, y, h_up)
+        qy_own = quant_up.decode(k_up, msg, srv)
+        qy_sum = transport.generic_sum(quant_up, k_up, msg, srv, qy_own,
+                                       client_axis, client_in_mesh,
+                                       n_slots)
         srv_new = (srv + qy_sum) / denom
 
         h_dn = _psum_norm(jnp.sum(jnp.square(qy_own - srv)), model_axes)
         if client_in_mesh:
             h_dn = jax.lax.pmax(h_dn, client_axis)
         k_dn = jax.random.fold_in(kk, 2)
-        msg_s = quant.encode(k_dn, srv, 2.0 * h_dn + 1e-8)
-        qx = quant.decode(k_dn, msg_s, cl_flat)
+        msg_s = quant_down.encode(k_dn, srv, 2.0 * h_dn + 1e-8)
+        qx = quant_down.decode(k_dn, msg_s, cl_flat)
         cl_new = qx / denom + n_slots * y / denom
         qerr = jnp.sum(jnp.square(qy_own - y)) / n_slots
         return srv_new, cl_new, qerr

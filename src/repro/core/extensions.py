@@ -47,7 +47,12 @@ class ScaffoldState(NamedTuple):
 
 @dataclass(eq=False)
 class QuaflScaffold(QuAFL):
-    """QuAFL with SCAFFOLD control variates (option-II updates)."""
+    """QuAFL with SCAFFOLD control variates (option-II updates).
+
+    Both model and control messages ride the ``uplink`` codec; the two
+    downlink broadcasts ride the ``downlink`` codec. Stateful codecs
+    degrade to their stateless encode (the control-variate stream has no
+    error-feedback slot to thread)."""
 
     def init(self, params0) -> ScaffoldState:
         base = super().init(params0)
@@ -102,12 +107,12 @@ class QuaflScaffold(QuAFL):
         prog = jnp.linalg.norm(fed.lr * eta_i * h_tilde, axis=1)
 
         def updn(y, cn, ci, kk, hint):
-            m1 = self.quant.encode(kk, y, hint + 1e-8)
-            qy = self.quant.decode(kk, m1, base.server)
+            m1 = self.codec_up.encode(kk, y, hint + 1e-8)
+            qy = self.codec_up.decode(kk, m1, base.server)
             kk2 = jax.random.fold_in(kk, 17)
-            m2 = self.quant.encode(kk2, cn,
-                                   jnp.linalg.norm(cn - ci) + 1e-8)
-            qc = self.quant.decode(kk2, m2, ci)
+            m2 = self.codec_up.encode(kk2, cn,
+                                      jnp.linalg.norm(cn - ci) + 1e-8)
+            qc = self.codec_up.decode(kk2, m2, ci)
             return qy, qc
 
         QY, QC = jax.vmap(updn)(Y, c_new, c_i, kq_cl,
@@ -119,14 +124,15 @@ class QuaflScaffold(QuAFL):
         kq_srv = jax.random.fold_in(k_q, 0)
         hint_srv = jnp.max(jnp.linalg.norm(QY - base.server[None], axis=1)) \
             + 1e-8
-        msg = self.quant.encode(kq_srv, base.server, hint_srv)
-        QX = jax.vmap(lambda r: self.quant.decode(kq_srv, msg, r))(cl)
+        msg = self.codec_down.encode(kq_srv, base.server, hint_srv)
+        QX = jax.vmap(lambda r: self.codec_down.decode(kq_srv, msg, r))(cl)
         cl_new = QX / (s + 1) + s * Y / (s + 1)
 
-        # 2 lattice messages per sampled client up (model + control), 2 down
-        # (the broadcast Enc(X_t) + the control broadcast)
-        mb = self.quant.message_bits(self.d)
-        bits_up, bits_down = 2 * s * mb, 2 * mb
+        # 2 codec messages per sampled client up (model + control), 2 down
+        # (the broadcast Enc(X_t) + the control broadcast) — wire accounting
+        # by the per-direction codecs
+        bits_up = 2 * s * self.codec_up.message_bits(self.d)
+        bits_down = 2 * self.codec_down.message_bits(self.d)
         dt = fed.swt + fed.sit
         new_time = base.sim_time + dt
         nbase = QuaflState(
@@ -135,7 +141,11 @@ class QuaflScaffold(QuAFL):
             last_time=base.last_time.at[idx].set(new_time),
             bits_up=base.bits_up + bits_up,
             bits_down=base.bits_down + bits_down,
-            srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv)
+            srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv,
+            # carry the codec state through unchanged (scaffold runs
+            # stateless encodes, but the pytree structure must be stable
+            # for the scanned engine)
+            codec_up_state=base.codec_up_state)
         new_state = ScaffoldState(
             base=nbase, c_server=c_server_new,
             c_clients=state.c_clients.at[idx].set(QC))

@@ -13,6 +13,14 @@ the averaged delta. The deltas can be quantized (``quantize=True``) with:
     same fused rotate+quantize pipeline as QuAFL (backend selected by
     ``FedConfig.kernel_backend``). Beyond-paper option.
 
+Both knobs are now views over the composable codec API: ``uplink=`` /
+``downlink=`` specs (or ``FedConfig.codec_up`` / ``codec_down``) select
+ANY registered codec per direction — the legacy quantize/quantizer pair
+maps onto the equivalent codec so seeded legacy runs are unchanged draw
+for draw, and a stateful uplink codec (``topk_ef``) gets its per-client
+error-feedback residuals threaded through ``FedBuffState.ef`` on this
+python implementation.
+
 FedBuff's control flow is data-dependent, so it is simulated (event-driven
 python around a jitted local-steps function) rather than SPMD. The event
 machinery — ``Gamma(K, λ)`` completion times feeding a min-heap of arrivals —
@@ -39,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression.codecs import IdentityCodec, resolve_codec
 from repro.compression.lattice import make_quantizer
 from repro.configs.base import FedConfig
 from repro.fed.clock import (ArrivalQueue, completion_time,
@@ -66,6 +75,8 @@ class FedBuffState:
     bits_down: float = 0.0
     rng: Optional[np.random.Generator] = None   # seeded on first round
     jkey: Optional[jax.Array] = None
+    ef: Optional[List] = None           # per-client residuals of a stateful
+    #                                   # (error-feedback) uplink codec
 
     @property
     def bits_sent(self):
@@ -84,6 +95,10 @@ class FedBuff:
     quantize: bool = False
     quantizer: str = "qsgd"   # 'qsgd' (paper) | 'lattice' (delta-vs-zero)
     uniform_speeds: bool = False
+    uplink: Any = None        # codec spec; default derives from the legacy
+    #                         # quantize/quantizer knobs (identity when off)
+    downlink: Any = None      # codec spec for the restart broadcast
+    #                         # (default identity: fp32 server model)
 
     def __post_init__(self):
         n = self.fed.n_clients
@@ -92,6 +107,19 @@ class FedBuff:
                                     else "none", self.fed.bits,
                                     getattr(self.fed, "kernel_backend",
                                             "jnp"))
+        # per-direction codecs; the legacy quantize/quantizer pair maps to
+        # the equivalent codec (qsgd -> scalar, lattice -> lattice) so
+        # seeded legacy runs are unchanged draw for draw
+        legacy_up = ({"qsgd": "scalar", "lattice": "lattice",
+                      "none": "identity"}.get(self.quantizer, "identity")
+                     if self.quantize else "identity")
+        self.codec_up = resolve_codec(self.uplink, self.fed, direction="up",
+                                      default=legacy_up)
+        self.codec_down = resolve_codec(self.downlink, self.fed,
+                                        direction="down",
+                                        default="identity")
+        self._down_identity = isinstance(self.codec_down, IdentityCodec)
+        self._up_compressed = not isinstance(self.codec_up, IdentityCodec)
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
 
@@ -119,9 +147,11 @@ class FedBuff:
     def init(self, params0) -> FedBuffState:
         server = tree_flatten_vector(params0)
         n = self.fed.n_clients
+        ef = ([self.codec_up.init_state(self.d) for _ in range(n)]
+              if self.codec_up.stateful else None)
         return FedBuffState(server=server,
                             start_model=[server for _ in range(n)],
-                            queue=None, buffer=[])
+                            queue=None, buffer=[], ef=ef)
 
     def _seed(self, state: FedBuffState, key) -> FedBuffState:
         """Seed the event rng from a jax key (legacy ``run`` derivation)."""
@@ -139,7 +169,8 @@ class FedBuff:
         costs one O(n_clients) copy instead of Z."""
         return replace(state, queue=state.queue.copy(),
                        start_model=list(state.start_model),
-                       buffer=list(state.buffer), rng=_copy_rng(state.rng))
+                       buffer=list(state.buffer), rng=_copy_rng(state.rng),
+                       ef=None if state.ef is None else list(state.ef))
 
     def _completion(self, state: FedBuffState, data, want_metrics=False):
         """Process ONE client completion event, MUTATING ``state``.
@@ -152,21 +183,24 @@ class FedBuff:
         delta = self._local(state.start_model[i], jax.tree_util.tree_map(
             lambda a: a[i], data), sub)
         rel_err = None
-        if self.quantize:
+        if self._up_compressed:
             state.jkey, qk = jax.random.split(state.jkey)
-            # lattice path: deltas are position-aware decodable against
-            # the zero vector with hint ‖Δ‖ (one fused encode + decode
-            # pass through the pipeline backend); QSGD ignores both.
-            msg = self.quant.encode(
-                qk, delta, jnp.linalg.norm(delta) + 1e-12)
-            dq = self.quant.decode(qk, msg, jnp.zeros_like(delta))
+            # deltas are decodable against the zero vector with hint ‖Δ‖
+            # for every codec (position-aware lattice rides one fused
+            # encode + decode pass; scalar/top-k ignore the reference);
+            # stateful codecs thread the client's error-feedback residual
+            hint = jnp.linalg.norm(delta) + 1e-12
+            if self.codec_up.stateful:
+                msg, state.ef[i] = self.codec_up.encode_stateful(
+                    qk, delta, hint, state.ef[i])
+            else:
+                msg = self.codec_up.encode(qk, delta, hint)
+            dq = self.codec_up.decode(qk, msg, jnp.zeros_like(delta))
             if want_metrics:
                 rel_err = (jnp.linalg.norm(dq - delta)
                            / (jnp.linalg.norm(delta) + 1e-12))
             delta = dq
-            state.bits_up += self.quant.message_bits(self.d)
-        else:
-            state.bits_up += self.d * 32
+        state.bits_up += self.codec_up.message_bits(self.d)
         state.buffer.append(delta)
         if len(state.buffer) >= self.buffer_size:
             # Δ = start − end = η·Σg points downhill: w ← w − η_g·avg(Δ)
@@ -174,9 +208,19 @@ class FedBuff:
                 jnp.stack(state.buffer), 0)
             state.buffer = []
             state.t += 1
-        # client restarts from the current server model: one fp32 downlink
-        state.start_model[i] = state.server
-        state.bits_down += self.d * 32
+        # client restarts from the downlinked server model: fp32 by
+        # default, codec-encoded (decoded against the client's previous
+        # start model — the reference it still holds) otherwise
+        if self._down_identity:
+            state.start_model[i] = state.server
+        else:
+            state.jkey, dk = jax.random.split(state.jkey)
+            hint_dn = (jnp.linalg.norm(state.server - state.start_model[i])
+                       + 1e-12)
+            msg_dn = self.codec_down.encode(dk, state.server, hint_dn)
+            state.start_model[i] = self.codec_down.decode(
+                dk, msg_dn, state.start_model[i])
+        state.bits_down += self.codec_down.message_bits(self.d)
         state.sim_time = float(t_now)
         state.queue.push(t_now + completion_time(
             state.rng, self.fed.local_steps, self.lam[i]), i)
@@ -296,6 +340,8 @@ class FedBuffDevice(FedBuff):
 
     def __post_init__(self):
         super().__post_init__()
+        # stateful codecs degrade to their stateless encode here; the
+        # python 'fedbuff' threads real per-client error feedback
         self._lam_j = jnp.asarray(self.lam)
         self._table_j = (jnp.asarray(self.completion_table, jnp.float32)
                          if self.completion_table is not None else None)
@@ -356,11 +402,11 @@ class FedBuffDevice(FedBuff):
             delta = self._local(start[i], jax.tree_util.tree_map(
                 lambda a: a[i], data), sub)
             rel = jnp.zeros(())
-            if self.quantize:
+            if self._up_compressed:
                 jkey, qk = jax.random.split(jkey)
-                msg = self.quant.encode(
+                msg = self.codec_up.encode(
                     qk, delta, jnp.linalg.norm(delta) + 1e-12)
-                dq = self.quant.decode(qk, msg, jnp.zeros_like(delta))
+                dq = self.codec_up.decode(qk, msg, jnp.zeros_like(delta))
                 rel = (jnp.linalg.norm(dq - delta)
                        / (jnp.linalg.norm(delta) + 1e-12))
                 delta = dq
@@ -372,7 +418,14 @@ class FedBuffDevice(FedBuff):
                 z == Z - 1,
                 lambda s: s - self.server_lr * jnp.mean(buffer, 0),
                 lambda s: s, server)
-            start = start.at[i].set(server)
+            if self._down_identity:
+                restart = server
+            else:
+                jkey, dk = jax.random.split(jkey)
+                hint_dn = jnp.linalg.norm(server - start[i]) + 1e-12
+                msg_dn = self.codec_down.encode(dk, server, hint_dn)
+                restart = self.codec_down.decode(dk, msg_dn, start[i])
+            start = start.at[i].set(restart)
             if self._table_j is None:
                 jkey, kt = jax.random.split(jkey)
             else:
@@ -389,9 +442,10 @@ class FedBuffDevice(FedBuff):
         (queue, occ, jkey, server, start, t_now, _, errs), _ = jax.lax.scan(
             completion, carry0, jnp.arange(Z))
 
-        up_per = (self.quant.message_bits(d) if self.quantize else d * 32)
-        bits_up = jnp.asarray(Z * up_per, jnp.float32)
-        bits_down = jnp.asarray(Z * d * 32, jnp.float32)
+        # wire accounting by the per-direction codecs
+        bits_up = jnp.asarray(Z * self.codec_up.message_bits(d), jnp.float32)
+        bits_down = jnp.asarray(Z * self.codec_down.message_bits(d),
+                                jnp.float32)
         new_time = t_now.astype(jnp.float32)
         new_state = FedBuffDeviceState(
             server=server, start=start, queue=queue, occ=occ,
@@ -405,7 +459,7 @@ class FedBuffDevice(FedBuff):
             "bits_up": bits_up,
             "bits_down": bits_down,
             "h_steps_mean": jnp.asarray(fed.local_steps, jnp.float32),
-            "quant_err": (jnp.mean(errs) if self.quantize
+            "quant_err": (jnp.mean(errs) if self._up_compressed
                           else jnp.zeros(())),
             "buffer_flushes": jnp.ones(()),
         }

@@ -39,6 +39,19 @@ This class implements the :class:`repro.fed.FedAlgorithm` protocol
 (``init / round / eval_params``) and emits the standardized metrics schema
 (``sim_time``, ``bits_up``, ``bits_down``, ``h_steps_mean``, ``quant_err``,
 ...); select it by name via ``repro.fed.make_algorithm("quafl", ...)``.
+
+Compression is COMPOSABLE (:mod:`repro.compression.codecs`): ``uplink=`` /
+``downlink=`` codec specs (or ``FedConfig.codec_up`` / ``codec_down``)
+select the per-direction scheme by name — lattice-family codecs (including
+sub-byte ``lattice_packed`` wires and per-client heterogeneous
+``{"fast": ..., "slow": ...}`` bit budgets) keep riding the fused
+rotated-space pipeline; any other codec runs the per-message composition.
+``bits_up`` / ``bits_down`` are computed by the codecs' wire accounting.
+Error-feedback residuals assume a ZERO decode reference, which QuAFL's
+model-vs-server uplink does not provide — stateful codecs therefore run
+their stateless encode here (``QuaflState.codec_up_state`` stays empty
+unless a codec declares itself reference-agnostic); the delta-style
+uplinks (``fedbuff``, ``compressed_fedavg``) are where EF threads.
 """
 from __future__ import annotations
 
@@ -50,6 +63,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression.codecs import (GroupedLatticeCodec,
+                                      init_client_states, is_lattice_family,
+                                      resolve_codec)
 from repro.compression.lattice import make_quantizer
 from repro.compression.pipeline import ExchangePipeline
 from repro.configs.base import FedConfig
@@ -68,6 +84,8 @@ class QuaflState(NamedTuple):
     bits_up: jnp.ndarray       # cumulative client->server bits
     bits_down: jnp.ndarray     # cumulative server->client bits
     srv_dist_est: jnp.ndarray  # running ‖X_t − X^i‖ estimate (server Enc hint)
+    codec_up_state: Any = ()   # per-client encoder state of a stateful
+    #                          # uplink codec (error feedback); () otherwise
 
     @property
     def bits_sent(self):
@@ -84,21 +102,33 @@ class QuAFL:
     avg_mode: str = "both"                 # 'both'|'server_only'|'client_only'
     uniform_speeds: bool = False
     exchange_impl: str = "pipeline"        # 'pipeline' | 'reference' (oracle)
+    uplink: Any = None                     # codec spec (default: fed-derived)
+    downlink: Any = None                   # codec spec (default: fed-derived)
 
     def __post_init__(self):
         backend = getattr(self.fed, "kernel_backend", "jnp")
         self.quant = make_quantizer(self.fed.quantizer, self.fed.bits,
                                     backend)
-        # rotated-space exchange engine (lattice only — QSGD/identity have no
-        # rotation to restructure around); shares every knob with the
-        # quantizer so bit accounting and γ derivation stay in lockstep
-        self.pipeline = (ExchangePipeline(bits=self.quant.bits,
-                                          block=self.quant.block,
-                                          safety=self.quant.safety,
-                                          backend=backend)
-                         if self.fed.quantizer == "lattice" else None)
         n = self.fed.n_clients
         self.lam = speeds_for(self.fed, n, uniform=self.uniform_speeds)
+        # per-direction codecs; the straggler mask resolves group specs
+        # ({"fast": ..., "slow": ...}) into per-client bit budgets
+        slow_mask = np.asarray(self.lam) == np.float32(self.fed.lam_slow)
+        self.codec_up = resolve_codec(self.uplink, self.fed, direction="up",
+                                      slow_mask=slow_mask)
+        self.codec_down = resolve_codec(self.downlink, self.fed,
+                                        direction="down")
+        # rotated-space exchange engine whenever BOTH directions are
+        # lattice-family (QSGD/identity/top-k have no rotation to
+        # restructure around); shares every knob with the codecs so bit
+        # accounting and γ derivation stay in lockstep
+        self.pipeline = (ExchangePipeline(bits=self.codec_up.bits,
+                                          block=self.codec_up.block,
+                                          safety=self.codec_up.safety,
+                                          backend=backend)
+                         if (is_lattice_family(self.codec_up)
+                             and is_lattice_family(self.codec_down))
+                         else None)
         self.H = expected_steps(self.fed, self.lam)
         self.eta_i = ((self.H.min() / self.H) if self.fed.weighted
                       else np.ones(n)).astype(np.float32)
@@ -109,6 +139,20 @@ class QuAFL:
                          jax.tree_util.tree_leaves(self.template)))
 
     # ------------------------------------------------------------------
+    @property
+    def _thread_ef(self) -> bool:
+        """QuAFL's uplink is decoded against the SERVER model (non-zero
+        reference), so error-feedback residuals — which assume the decoder
+        reconstructs zero off the transmitted support — are only threaded
+        for codecs that declare themselves reference-agnostic; everything
+        else uses the stateless encode."""
+        return self.codec_up.stateful and not getattr(
+            self.codec_up, "ef_zero_ref_only", True)
+
+    def _codec_state0(self):
+        return (init_client_states(self.codec_up, self.fed.n_clients,
+                                   self.d) if self._thread_ef else ())
+
     def init(self, params0) -> QuaflState:
         x0 = tree_flatten_vector(params0)
         n = self.fed.n_clients
@@ -117,7 +161,8 @@ class QuAFL:
             t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
             last_time=jnp.zeros((n,)), bits_up=jnp.zeros(()),
             bits_down=jnp.zeros(()),
-            srv_dist_est=jnp.ones(()) * 1e-3)
+            srv_dist_est=jnp.ones(()) * 1e-3,
+            codec_up_state=self._codec_state0())
 
     # ------------------------------------------------------------------
     def _grad(self, flat, batch):
@@ -165,33 +210,53 @@ class QuAFL:
         # --- quantized exchange (shared per-interaction keys) -----------
         prog_norm = jnp.linalg.norm(prog, axis=1)
         hints_up = prog_norm + state.srv_dist_est + 1e-8
+        codec_state_new = state.codec_up_state
 
         if self.pipeline is not None:
             # rotated-space engine: one shared rotation per round, all
             # encode/decode/averaging in rotated coordinates (s+1 forward,
             # s+1 inverse full-model rotations — audited in the tests).
+            # The per-direction codecs parameterize the wire (bit-width,
+            # sub-byte packing, per-client levels) without touching the
+            # rotation structure.
             fn = (self.pipeline.quafl_round
                   if self.exchange_impl == "pipeline"
                   else self.pipeline.quafl_round_reference)
             server_new, cl_new, hint_srv, rel_err = fn(
-                k_q, state.server, Y, hints_up, avg_mode=self.avg_mode)
+                k_q, state.server, Y, hints_up, avg_mode=self.avg_mode,
+                up=self.codec_up.wire(idx), down=self.codec_down.wire())
         else:
-            # QSGD / identity: no rotation to restructure around
+            # scalar / identity / top-k: no rotation to restructure around
             kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
 
-            def enc_dec_up(y, kk, hint):
-                msg = self.quant.encode(kk, y, hint)
-                return self.quant.decode(kk, msg, state.server)
+            if self._thread_ef:
+                cs = jax.tree_util.tree_map(lambda a: a[idx],
+                                            state.codec_up_state)
 
-            QY = jax.vmap(enc_dec_up)(Y, kq_cl, hints_up)        # (s, d)
+                def enc_dec_up(y, kk, hint, cs_i):
+                    msg, cs_i = self.codec_up.encode_stateful(
+                        kk, y, hint, cs_i)
+                    return self.codec_up.decode(kk, msg, state.server), cs_i
+
+                QY, cs_new = jax.vmap(enc_dec_up)(Y, kq_cl, hints_up, cs)
+                codec_state_new = jax.tree_util.tree_map(
+                    lambda full, ns: full.at[idx].set(ns),
+                    state.codec_up_state, cs_new)
+            else:
+                def enc_dec_up(y, kk, hint):
+                    msg = self.codec_up.encode(kk, y, hint)
+                    return self.codec_up.decode(kk, msg, state.server)
+
+                QY = jax.vmap(enc_dec_up)(Y, kq_cl, hints_up)    # (s, d)
 
             # server -> clients: ONE encode, per-client decode vs own X^i
             kq_srv = jax.random.fold_in(k_q, 0)
             hint_srv = (jnp.max(jnp.linalg.norm(QY - state.server[None],
                                                 axis=1)) + 1e-8)
-            msg_srv = self.quant.encode(kq_srv, state.server, hint_srv)
+            msg_srv = self.codec_down.encode(kq_srv, state.server, hint_srv)
             QX = jax.vmap(
-                lambda ref: self.quant.decode(kq_srv, msg_srv, ref))(cl)
+                lambda ref: self.codec_down.decode(kq_srv, msg_srv,
+                                                   ref))(cl)
 
             # --- averaging ------------------------------------------------
             if self.avg_mode == "both":
@@ -210,11 +275,15 @@ class QuAFL:
                                / (jnp.linalg.norm(Y, axis=1) + 1e-9))
         clients_new = state.clients.at[idx].set(cl_new)
 
-        # bit accounting, split by direction: s uplink messages + ONE
-        # downlink broadcast Enc(X_t) (every sampled client decodes the same
-        # codes against its own model)
-        mb = self.quant.message_bits(self.d)
-        bits_up, bits_down = s * mb, mb
+        # bit accounting, computed BY the codecs' wire formats: s uplink
+        # messages (per-client widths under a grouped codec) + ONE downlink
+        # broadcast Enc(X_t) (every sampled client decodes the same codes
+        # against its own model)
+        if isinstance(self.codec_up, GroupedLatticeCodec):
+            bits_up = self.codec_up.bits_for(idx, self.d)   # traced sum
+        else:
+            bits_up = s * self.codec_up.message_bits(self.d)
+        bits_down = self.codec_down.message_bits(self.d)
         dt = fed.swt + fed.sit
         new_time = state.sim_time + dt
         state = QuaflState(
@@ -223,7 +292,8 @@ class QuAFL:
             last_time=state.last_time.at[idx].set(new_time),
             bits_up=state.bits_up + bits_up,
             bits_down=state.bits_down + bits_down,
-            srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv)
+            srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv,
+            codec_up_state=codec_state_new)
         metrics = {
             "sim_time": new_time,
             "round_time": jnp.asarray(dt, jnp.float32),

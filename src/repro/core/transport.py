@@ -1,23 +1,26 @@
-"""Leaf-wise quantized transport for the DISTRIBUTED QuAFL train step.
+"""Leaf-wise codec transport helpers for the DISTRIBUTED QuAFL train step.
 
 The simulation core (repro.core.quafl) works on one flat vector; on a mesh
-we quantize per parameter leaf instead (each leaf flattens to its own vector,
+we encode per parameter leaf instead (each leaf flattens to its own vector,
 rotation blocks never cross leaves). Algebraically this is still a valid
 instance of the blockwise lattice quantizer — the rotation is block-diagonal
 either way — and it keeps every encode/decode local to the shards that own
-the leaf.
+the leaf. The helpers are CODEC-AGNOSTIC: any
+:mod:`repro.compression.codecs` object (or legacy quantizer) with
+``encode(key, x, hint) / decode(key, msg, ref) / message_bits(d)`` rides
+them, and messages are opaque pytrees.
 
-Two aggregation transports (see DESIGN.md §3):
-  * dequant_psum   — decode locally, all-reduce fp32 partials (faithful
-                     reading of Alg. 1 line 8 on a pod).
-  * code_allgather — replicate the packed integer codes (uint8/16) across the
-                     client axis, decode all messages locally, sum locally.
-                     Moves b-bit codes over the interconnect instead of fp32.
+The aggregation strategies themselves (fp32 psum vs. packed-code
+all-gather vs. the reduce-scatter fusion) are the pluggable
+:class:`repro.compression.transports.Transport` registry; the vmap-level
+legacy compositions (dequant_psum / code_allgather) live in
+``repro.launch.steps`` and the shard_map family in
+``repro.core.exchange_local``.
 
 The per-leaf encode/decode math runs through the compression-pipeline
-backend selected by ``FedConfig.kernel_backend`` (the quantizer delegates to
-repro.compression.pipeline): each Enc is one fused rotate+round+wrap pass
-and each Dec one fused rotate-ref+snap+inverse-rotate pass — no
+backend selected by ``FedConfig.kernel_backend`` (lattice codecs delegate
+to repro.compression.pipeline): each Enc is one fused rotate+round+wrap
+pass and each Dec one fused rotate-ref+snap+inverse-rotate pass — no
 materialized rotation intermediates. The fully rotated-space restructuring
 (one rotation per vector per ROUND) lives in repro.core.exchange_local for
 the shard-local transports and repro.compression.pipeline.quafl_round for

@@ -35,6 +35,10 @@ totals pin bit-for-bit: QuAFL's downlink Enc(X_t) is ONE broadcast message
 FedAvg and FedBuff downlinks are per-client unicasts of the fp32 model
 (s·d·32 resp. d·32 per restart) — the server model is the decode *payload*
 there, not a shared code. Equal-bits comparisons inherit this convention.
+The per-message sizes themselves are computed BY the selected codecs
+(:mod:`repro.compression.codecs` — ``message_bits`` is the codec's WIRE
+accounting, so word-aligned uint codes, sub-byte packed codes, and sparse
+(index, value) messages all report what the interconnect actually moves).
 
 Algorithms are free to add extra keys (``h_zero_frac``, ``c_norm``,
 ``bits_width``, ...); consumers that only rely on the schema keys stay

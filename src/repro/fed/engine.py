@@ -189,6 +189,14 @@ class RoundEngine:
 
         Returns ``(key, state, stacked_metrics)`` where ``stacked_metrics``
         leaves carry a leading ``(length,)`` axis (round-major).
+
+        The INPUT ``state`` buffers are DONATED to the compiled chunk: for
+        d=2^20+ regimes the scan carry reuses the caller's state
+        allocation instead of holding both generations live across the
+        chunk entry (ROADMAP scan-polish item a). Callers must treat the
+        passed-in state as consumed — both ``simulate()`` and the adaptive
+        walk already discard it in favour of the returned state. The
+        (tiny, caller-supplied) ``key`` is NOT donated.
         """
         custom = getattr(self.alg, "scan_rounds", None)
         if custom is not None:
@@ -208,6 +216,6 @@ class RoundEngine:
                                            length=length)
                 return k, st, ms
 
-            fn = jax.jit(run)
+            fn = jax.jit(run, donate_argnums=(0,))
             self._chunk_fns[length] = fn
         return fn(state, data, key)

@@ -27,6 +27,17 @@ harness) instead of hand-wiring a class per experiment:
                       protocol (one client per mesh data slice); kwargs:
                       ``cfg`` (ModelConfig, REQUIRED), ``mesh``, ``batch``,
                       ``seq``, ``fed_mode``, ``transport``, ``remat``
+  ``compressed_fedavg``  FedPAQ-family compressed synchronous FedAvg
+                      (arXiv:2106.07155, arXiv:2308.08165) built purely
+                      from the codec API; kwargs: ``server_lr``,
+                      ``uniform_speeds``
+
+Every algorithm that communicates additionally accepts ``uplink=`` /
+``downlink=`` codec specs (:mod:`repro.compression.codecs` — names like
+``"lattice_packed"``, ``"scalar:bits=4"``, or a ``{"fast": ..., "slow":
+...}`` per-client group map), defaulting to ``FedConfig.codec_up`` /
+``codec_down`` and then to the algorithm's historical scheme; the metrics'
+``bits_up`` / ``bits_down`` are computed by the selected codecs.
 
 The registry is extensible: third-party variants join via
 :func:`register_algorithm` and immediately work with ``simulate()`` /
@@ -77,7 +88,8 @@ def _build_adaptive(fed, loss_fn, template, batch_fn, **kw):
     from repro.core.extensions import AdaptiveQuaflAlgorithm
     from repro.core.quafl import QuAFL
     quafl_kw = {k: kw.pop(k) for k in ("avg_mode", "uniform_speeds",
-                                       "exchange_impl") if k in kw}
+                                       "exchange_impl", "uplink",
+                                       "downlink") if k in kw}
 
     def make_alg(f):
         return QuAFL(fed=f, loss_fn=loss_fn, template=template,
@@ -90,6 +102,12 @@ def _build_fedbuff_device(fed, loss_fn, template, batch_fn, **kw):
     from repro.core.fedbuff import FedBuffDevice
     return FedBuffDevice(fed=fed, loss_fn=loss_fn, template=template,
                          batch_fn=batch_fn, **kw)
+
+
+def _build_compressed_fedavg(fed, loss_fn, template, batch_fn, **kw):
+    from repro.core.fedavg import CompressedFedAvg
+    return CompressedFedAvg(fed=fed, loss_fn=loss_fn, template=template,
+                            batch_fn=batch_fn, **kw)
 
 
 def _build_spmd(fed, loss_fn, template, batch_fn, **kw):
@@ -109,6 +127,7 @@ _BUILDERS: Dict[str, Callable[..., FedAlgorithm]] = {
     "adaptive_quafl": _build_adaptive,
     "fedbuff_device": _build_fedbuff_device,
     "spmd": _build_spmd,
+    "compressed_fedavg": _build_compressed_fedavg,
 }
 
 

@@ -24,7 +24,9 @@ results are merged in; scalars land under ``"eval"``).
   * **scanned** (``scan_chunk=K``) — for algorithms with the
     ``device_round`` capability (:mod:`repro.fed.engine`), rounds run in
     jitted ``lax.scan`` chunks of up to K rounds with ONE host sync per
-    chunk. The key-split schedule matches the eager loop, so a scanned run
+    chunk; the chunk entry DONATES the carried state buffers (the previous
+    chunk's output is consumed, not copied — rows and evals are recorded
+    from the returned state before the next chunk reuses it). The key-split schedule matches the eager loop, so a scanned run
     is bit-for-bit the eager run under the same seed (exact in the
     equivalence tests for uncompressed/qsgd rounds; the rotation-fused
     lattice kernels agree to float32 rounding at chunk lengths >= 2, where

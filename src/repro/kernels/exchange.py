@@ -25,6 +25,19 @@ pass per (r, c) Hadamard block:
                         full ``Dec(ref, msg)`` in one pass (used by the
                         leaf-wise transport and the quantizer API)
 
+**Sub-byte packing** (the ``lattice_packed`` codec): for ``bits`` in
+{1, 2, 4} the encode-side kernels accept ``pack = 8 // bits`` and emit
+``pack`` codes per byte — packed along the SUBLANE (r) axis of each
+(r, c) Hadamard block, so the combine is a static reshape + shift-sum that
+never crosses the 128-wide lane dimension — and the snap/decode kernels
+unpack the same layout inline. The packed wire dtype is uint8 with
+``d_pad // pack`` elements: at b=4 the codes tensor (what the
+code_allgather transport moves over the interconnect) is exactly half the
+unpacked uint8 bytes. ``pack=1`` (the default, and any ``bits >= 8``) is
+bit-for-bit the historical unpacked path. :func:`pack_codes` /
+:func:`unpack_codes` are the jnp reference implementations of the same
+layout (used by the ``jnp`` backend and the per-message codec API).
+
 All kernels run over a ``(m, nb)`` grid — ``m`` messages by ``nb`` Hadamard
 blocks — with one (r, c) block per step; the two small Hadamard factors hit
 the MXU directly. Batched operands broadcast along ``m`` through the block
@@ -70,6 +83,65 @@ def _had(r: int, c: int):
     return jnp.asarray(hadamard_matrix(r)), jnp.asarray(hadamard_matrix(c))
 
 
+def _check_pack(pack: int, bits: int, r: int):
+    if pack == 1:
+        return
+    if pack * bits != 8:
+        raise ValueError(f"pack={pack} requires pack*bits == 8 "
+                         f"(got bits={bits})")
+    if r % pack:
+        raise ValueError(f"pack={pack} does not divide the Hadamard "
+                         f"sublane factor r={r}; vector too small to pack")
+
+
+def _pack_block(q, pack: int, bits: int):
+    """(r, c) uint32 codes -> (r//pack, c) uint8, packed along sublanes."""
+    r, c = q.shape
+    qi = q.astype(jnp.uint32).reshape(r // pack, pack, c)
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits)[None, :, None]
+    return jnp.sum(qi << shifts, axis=1).astype(jnp.uint8)
+
+
+def _unpack_block(p, pack: int, bits: int):
+    """(r//pack, c) packed uint8 -> (r, c) uint32 codes."""
+    rp, c = p.shape
+    pi = p.astype(jnp.uint32)[:, None, :]
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits)[None, :, None]
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((pi >> shifts) & mask).reshape(rp * pack, c)
+
+
+def pack_codes(codes2: jnp.ndarray, *, bits: int,
+               block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """(m, d_pad) codes -> (m, d_pad // (8//bits)) uint8, block-sublane
+    packed — the ``lattice_packed`` wire layout (jnp reference)."""
+    pack = 8 // bits
+    m, d_pad = codes2.shape
+    _, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
+    x = codes2.astype(jnp.uint32).reshape(m, nb, r // pack, pack, c)
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits
+              ).reshape(1, 1, 1, pack, 1)
+    return jnp.sum(x << shifts, axis=3).astype(jnp.uint8).reshape(
+        m, d_pad // pack)
+
+
+def unpack_codes(packed2: jnp.ndarray, *, bits: int,
+                 block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`: (m, d_pad//pack) uint8 -> (m, d_pad)
+    uint32."""
+    pack = 8 // bits
+    m, dp = packed2.shape
+    d_pad = dp * pack
+    _, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
+    x = packed2.astype(jnp.uint32).reshape(m, nb, r // pack, 1, c)
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits
+              ).reshape(1, 1, 1, pack, 1)
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((x >> shifts) & mask).reshape(m, d_pad)
+
+
 def _row_spec(m: int, r: int, c: int):
     """BlockSpec for a (m_or_1, nb, r, c) operand broadcast along the grid's
     message axis when its leading dim is 1."""
@@ -98,39 +170,53 @@ def _rotate_kernel(x_ref, s_ref, hr_ref, hc_ref, o_ref, *, scale: float,
     o_ref[0, 0] = y
 
 
+def _bits_of(levels: int) -> int:
+    return int(levels).bit_length() - 1
+
+
 def _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref, y_ref,
-                   *, scale: float, levels: int, want_rotated: bool):
+                   *, scale: float, levels: int, want_rotated: bool,
+                   pack: int = 1):
     x = x_ref[0, 0].astype(jnp.float32) * s_ref[0]
     y = jnp.dot(hr_ref[...], x, preferred_element_type=jnp.float32)
     y = jnp.dot(y, hc_ref[...], preferred_element_type=jnp.float32) * scale
     g = g_ref[0, 0]
     q = jnp.floor(y / g + u_ref[0, 0])
-    c_ref[0, 0] = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    q = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    c_ref[0, 0] = q if pack == 1 else _pack_block(q, pack, _bits_of(levels))
     if want_rotated:
         y_ref[0, 0] = y
 
 
-def _quantize_kernel(y_ref, u_ref, g_ref, c_ref, *, levels: int):
+def _quantize_kernel(y_ref, u_ref, g_ref, c_ref, *, levels: int,
+                     pack: int = 1):
     g = g_ref[0, 0]
     q = jnp.floor(y_ref[0, 0].astype(jnp.float32) / g + u_ref[0, 0])
-    c_ref[0, 0] = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    q = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    c_ref[0, 0] = q if pack == 1 else _pack_block(q, pack, _bits_of(levels))
 
 
-def _snap_kernel(c_ref, w_ref, g_ref, o_ref, *, levels: int):
+def _snap_kernel(c_ref, w_ref, g_ref, o_ref, *, levels: int, pack: int = 1):
     g = g_ref[0, 0]
-    c = c_ref[0, 0].astype(jnp.float32)
+    c = c_ref[0, 0]
+    if pack > 1:
+        c = _unpack_block(c, pack, _bits_of(levels))
+    c = c.astype(jnp.float32)
     q = c + levels * jnp.round((w_ref[0, 0] / g - c) / levels)
     o_ref[0, 0] = q * g
 
 
 def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, o_ref, *,
-                   scale: float, levels: int):
+                   scale: float, levels: int, pack: int = 1):
     s = s_ref[0]
     w = ref_ref[0, 0].astype(jnp.float32) * s
     w = jnp.dot(hr_ref[...], w, preferred_element_type=jnp.float32)
     w = jnp.dot(w, hc_ref[...], preferred_element_type=jnp.float32) * scale
     g = g_ref[0, 0]
-    c = c_ref[0, 0].astype(jnp.float32)
+    c = c_ref[0, 0]
+    if pack > 1:
+        c = _unpack_block(c, pack, _bits_of(levels))
+    c = c.astype(jnp.float32)
     q = c + levels * jnp.round((w / g - c) / levels)
     x = jnp.dot(hr_ref[...], q * g, preferred_element_type=jnp.float32)
     x = jnp.dot(x, hc_ref[...], preferred_element_type=jnp.float32) * scale
@@ -166,23 +252,28 @@ def fused_rotate(x2: jnp.ndarray, signs: jnp.ndarray, *,
 
 
 @partial(jax.jit, static_argnames=("bits", "block", "want_rotated",
-                                   "interpret"))
+                                   "interpret", "pack"))
 def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
                  gammas: jnp.ndarray, *, bits: int = 8,
                  block: int = DEFAULT_BLOCK, want_rotated: bool = False,
-                 interpret: bool = True):
+                 interpret: bool = True, pack: int = 1):
     """Rotate + stochastic-round + wrap in one pass.
 
     x2: (m, d_pad) padded messages; u2: U(0,1) rounding noise, same shape;
-    gammas: (m,) per-message scales. Returns codes (m, d_pad) uint32, or
-    (rotated, codes) when ``want_rotated`` (one extra VMEM->HBM store per
-    block instead of a second full rotation pass later).
+    gammas: (m,) per-message scales. Returns codes (m, d_pad) uint32 — or,
+    with ``pack = 8 // bits`` > 1, sub-byte-packed codes (m, d_pad // pack)
+    uint8 combined inside the kernel — or (rotated, codes) when
+    ``want_rotated`` (one extra VMEM->HBM store per block instead of a
+    second full rotation pass later).
     """
     m, d_pad = x2.shape
     b, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
     hr, hc = _had(r, c)
-    out_shape = [jax.ShapeDtypeStruct((m, nb, r, c), jnp.uint32)]
-    out_specs = [pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0))]
+    rp = r // pack
+    code_dt = jnp.uint8 if pack > 1 else jnp.uint32
+    out_shape = [jax.ShapeDtypeStruct((m, nb, rp, c), code_dt)]
+    out_specs = [pl.BlockSpec((1, 1, rp, c), lambda i, j: (i, j, 0, 0))]
     if want_rotated:
         out_shape.append(jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32))
         out_specs.append(pl.BlockSpec((1, 1, r, c),
@@ -193,7 +284,7 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
         _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref,
                        maybe_y[0] if maybe_y else None,
                        scale=1.0 / np.sqrt(b), levels=1 << bits,
-                       want_rotated=want_rotated)
+                       want_rotated=want_rotated, pack=pack)
 
     res = pl.pallas_call(
         body,
@@ -211,91 +302,106 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
         interpret=interpret,
     )(_blk(x2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
       _blk(u2.astype(jnp.float32), nb, r, c), hr, hc, _gamma_rows(gammas, m))
-    codes = res[0].reshape(m, d_pad)
+    codes = res[0].reshape(m, d_pad // pack)
     if want_rotated:
         return res[1].reshape(m, d_pad), codes
     return codes
 
 
-@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@partial(jax.jit, static_argnames=("bits", "block", "interpret", "pack"))
 def quantize_codes(y2: jnp.ndarray, u2: jnp.ndarray, gammas: jnp.ndarray, *,
                    bits: int = 8, block: int = DEFAULT_BLOCK,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool = True, pack: int = 1) -> jnp.ndarray:
     """Stochastic-round + wrap of already-rotated coordinates.
 
     y2: (m, d_pad) ROTATED messages; u2: U(0,1) rounding noise, same shape;
     gammas: (m,) per-message scales. Elementwise — no Hadamard factors touch
     the MXU, so encoding a cached rotated vector costs no rotation pass.
-    Bit-identical to the quantize half of ``fused_encode``.
+    Bit-identical to the quantize half of ``fused_encode`` (``pack``
+    included).
     """
     m, d_pad = y2.shape
     _, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
+    rp = r // pack
+    code_dt = jnp.uint8 if pack > 1 else jnp.uint32
     out = pl.pallas_call(
-        partial(_quantize_kernel, levels=1 << bits),
+        partial(_quantize_kernel, levels=1 << bits, pack=pack),
         grid=(m, nb),
         in_specs=[
             pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.uint32),
+        out_specs=pl.BlockSpec((1, 1, rp, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, rp, c), code_dt),
         interpret=interpret,
     )(_blk(y2.astype(jnp.float32), nb, r, c),
       _blk(u2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
-    return out.reshape(m, d_pad)
+    return out.reshape(m, d_pad // pack)
 
 
-@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@partial(jax.jit, static_argnames=("bits", "block", "interpret", "pack"))
 def snap_codes(codes2: jnp.ndarray, wrot2: jnp.ndarray, gammas: jnp.ndarray,
                *, bits: int = 8, block: int = DEFAULT_BLOCK,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True, pack: int = 1) -> jnp.ndarray:
     """Positional snap in rotated space: gamma * (c + 2^b round((w/g-c)/2^b)).
 
-    codes2 (mc, d_pad) and wrot2 (mw, d_pad) broadcast along the message
-    axis (mc or mw may be 1); gammas has the codes' batch size.
+    codes2 (mc, d_pad // pack) and wrot2 (mw, d_pad) broadcast along the
+    message axis (mc or mw may be 1); gammas has the codes' batch size.
+    With ``pack > 1`` the codes arrive sub-byte packed and are unpacked
+    inline, inside the kernel.
     """
-    mc, d_pad = codes2.shape
+    mc, d_padp = codes2.shape
+    d_pad = d_padp * pack
     mw = wrot2.shape[0]
     m = max(mc, mw)
     _, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
+    rp = r // pack
+    code_dt = jnp.uint8 if pack > 1 else jnp.uint32
     out = pl.pallas_call(
-        partial(_snap_kernel, levels=1 << bits),
+        partial(_snap_kernel, levels=1 << bits, pack=pack),
         grid=(m, nb),
         in_specs=[
-            _row_spec(mc, r, c),
+            _row_spec(mc, rp, c),
             _row_spec(mw, r, c),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
         interpret=interpret,
-    )(_blk(codes2.astype(jnp.uint32), nb, r, c),
+    )(_blk(codes2.astype(code_dt), nb, rp, c),
       _blk(wrot2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
     return out.reshape(m, d_pad)
 
 
-@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@partial(jax.jit, static_argnames=("bits", "block", "interpret", "pack"))
 def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
                  gammas: jnp.ndarray, *, bits: int = 8,
                  block: int = DEFAULT_BLOCK,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, pack: int = 1) -> jnp.ndarray:
     """Full positional decode: rotate ref + snap + inverse rotate, fused.
 
-    codes2 (mc, d_pad) vs references ref2 (mr, d_pad) in ORIGINAL space;
-    broadcasts along the message axis. Returns (max(mc, mr), d_pad) fp32 in
-    original coordinates (caller unpads with [:, :d]).
+    codes2 (mc, d_pad // pack) vs references ref2 (mr, d_pad) in ORIGINAL
+    space; broadcasts along the message axis. Packed codes (``pack > 1``)
+    are unpacked inline. Returns (max(mc, mr), d_pad) fp32 in original
+    coordinates (caller unpads with [:, :d]).
     """
-    mc, d_pad = codes2.shape
-    mr = ref2.shape[0]
+    mc = codes2.shape[0]
+    mr, d_pad = ref2.shape
     m = max(mc, mr)
     b, _, r, c, nb = block_geometry(d_pad, block)
+    _check_pack(pack, bits, r)
+    rp = r // pack
+    code_dt = jnp.uint8 if pack > 1 else jnp.uint32
     hr, hc = _had(r, c)
     out = pl.pallas_call(
-        partial(_decode_kernel, scale=1.0 / np.sqrt(b), levels=1 << bits),
+        partial(_decode_kernel, scale=1.0 / np.sqrt(b), levels=1 << bits,
+                pack=pack),
         grid=(m, nb),
         in_specs=[
-            _row_spec(mc, r, c),
+            _row_spec(mc, rp, c),
             _row_spec(mr, r, c),
             pl.BlockSpec((1, r, c), lambda i, j: (j, 0, 0)),
             pl.BlockSpec((r, r), lambda i, j: (0, 0)),
@@ -305,7 +411,7 @@ def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
         out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
         interpret=interpret,
-    )(_blk(codes2.astype(jnp.uint32), nb, r, c),
+    )(_blk(codes2.astype(code_dt), nb, rp, c),
       _blk(ref2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
       hr, hc, _gamma_rows(gammas, m))
     return out.reshape(m, d_pad)

@@ -33,7 +33,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.compression.lattice import make_quantizer
+from repro.compression.codecs import IdentityCodec, resolve_codec
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
 from repro.core.transport import tree_bits
 from repro.launch.steps import (TrainState, build_train_step, fed_mode_for,
@@ -83,17 +83,20 @@ class SpmdAlgorithm:
         self.n_slots = n_slots_for(self.mesh, self.fed_mode)
         shape = ShapeConfig("spmd", self.seq, self.batch * self.n_slots,
                             "train")
-        quantized = self.fed.quantizer != "none"
+        # per-direction codecs drive both the step build and the metrics'
+        # wire accounting (bits computed BY the codec, per leaf)
+        self.codec_up = resolve_codec(None, self.fed, direction="up")
+        self.codec_down = resolve_codec(None, self.fed, direction="down")
+        self.quant = self.codec_up   # legacy accessor
+        quantized = not (isinstance(self.codec_up, IdentityCodec)
+                         and isinstance(self.codec_down, IdentityCodec))
         with self.mesh:
             self._step, _, (self._state_sh, _, _) = build_train_step(
                 self.cfg, self.fed, self.mesh, shape,
                 fed_mode=self.fed_mode, transport=self.transport,
                 quantized=quantized, remat=self.remat)
-        self.quant = make_quantizer(self.fed.quantizer if quantized
-                                    else "none", self.fed.bits,
-                                    getattr(self.fed, "kernel_backend",
-                                            "jnp"))
-        self._msg_bits = tree_bits(self.quant, self.template)
+        self._bits_up_msg = tree_bits(self.codec_up, self.template)
+        self._bits_down_msg = tree_bits(self.codec_down, self.template)
 
     # ------------------------------------------------------------------
     def init(self, params0) -> SpmdState:
@@ -124,8 +127,8 @@ class SpmdAlgorithm:
                               jax.random.key_data(k_r))
 
         # QuAFL bit accounting: s uplink messages, one downlink broadcast
-        bits_up = jnp.asarray(n * self._msg_bits, jnp.float32)
-        bits_down = jnp.asarray(self._msg_bits, jnp.float32)
+        bits_up = jnp.asarray(n * self._bits_up_msg, jnp.float32)
+        bits_down = jnp.asarray(self._bits_down_msg, jnp.float32)
         dt = fed.swt + fed.sit
         new_time = state.sim_time + dt
         # schema quant_err: RMS decode error relative to the server norm

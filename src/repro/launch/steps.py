@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compression.lattice import make_quantizer
+from repro.compression.codecs import resolve_codec
+from repro.compression.transports import transport_for_mode
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
 from repro.core.quafl import client_speeds
 from repro.core.transport import leaf_dist, tree_decode, tree_encode
@@ -105,8 +106,17 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
     n_slots = n_slots_for(mesh, fed_mode)
     rules = rules_for_mode(fed_mode)
     K, lr = fed.local_steps, fed.lr
-    quant = make_quantizer(fed.quantizer if quantized else "none", fed.bits,
-                           getattr(fed, "kernel_backend", "jnp"))
+    # per-direction codecs (repro.compression.codecs): the legacy
+    # fed.quantizer map by default, any registry codec via fed.codec_up /
+    # codec_down; `quantized=False` forces the uncompressed identity pair
+    if quantized:
+        quant_up = resolve_codec(None, fed, direction="up")
+        quant_down = resolve_codec(None, fed, direction="down")
+    else:
+        quant_up = resolve_codec("identity", fed, direction="up")
+        quant_down = resolve_codec("identity", fed, direction="down")
+    # stateful codecs degrade to their stateless encode on the mesh path
+    # (no per-client residual buffers in the train state)
 
     lam = client_speeds(fed, n_slots) if n_slots > 1 else np.array(
         [fed.lam_fast], np.float32)
@@ -155,13 +165,13 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
         return Y_i, leaf_dist(Y_i, cp_i)
 
     def slot_encode(Y_i, hints_i, key_i):
-        return tree_encode(quant, key_i, Y_i, hints_i)
+        return tree_encode(quant_up, key_i, Y_i, hints_i)
 
     def slot_decode_up(msgs_i, key_i, server):
-        return tree_decode(quant, key_i, msgs_i, server)
+        return tree_decode(quant_up, key_i, msgs_i, server)
 
     def slot_update(cp_i, Y_i, k_srv, msg_srv, denom):
-        QX_i = tree_decode(quant, k_srv, msg_srv, cp_i)
+        QX_i = tree_decode(quant_down, k_srv, msg_srv, cp_i)
         return {k: (QX_i[k].astype(jnp.float32) / denom
                     + (denom - 1) * Y_i[k].astype(jnp.float32) / denom
                     ).astype(cp_i[k].dtype) for k in cp_i}
@@ -200,7 +210,8 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
             )(state.clients, toks, h_steps, etas, loc_keys)
 
         # ---- shard-local exchange (§Perf): whole exchange in shard_map ----
-        if transport in ("shard_local", "shard_local_codes") and quantized:
+        if transport in ("shard_local", "shard_local_codes",
+                         "shard_local_rs") and quantized:
             from repro.core.exchange_local import make_shardlocal_exchange
             rules_ = rules_for_mode(fed_mode)
             spec_, axes_ = abstract_lm(cfg)
@@ -211,8 +222,8 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
                                   mesh) for k, v in spec_.items()}
             client_axis = "pod" if fed_mode == "cohort" else "data"
             ex = make_shardlocal_exchange(
-                quant, mesh, srv_ps, cl_ps, client_axis, n_slots,
-                codes_transport=(transport == "shard_local_codes"))
+                quant_up, quant_down, mesh, srv_ps, cl_ps, client_axis,
+                n_slots, transport=transport_for_mode(transport))
             server_new, clients_new, qerr = ex(
                 state.server, state.clients, Ys,
                 jax.random.key_data(jax.random.fold_in(k_q, 3)))
@@ -226,9 +237,11 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
         msgs_up = vmap_slots(slot_encode)(Ys, hints_up, q_keys)
         if transport == "code_allgather" and quantized:
             repl = NamedSharding(mesh, P())
-            msgs_up = {k: type(m)(
-                codes=jax.lax.with_sharding_constraint(m.codes, repl),
-                gamma=m.gamma) for k, m in msgs_up.items()}
+            # replicate every message leaf (codes, scales, indices, ...) so
+            # any codec's wire format rides this transport
+            msgs_up = {k: jax.tree_util.tree_map(
+                lambda a: jax.lax.with_sharding_constraint(a, repl), m)
+                for k, m in msgs_up.items()}
         QYs = jax.vmap(slot_decode_up, in_axes=(0, 0, None),
                        spmd_axis_name=(None if transport == "code_allgather"
                                        else spmd_axis))(
@@ -248,7 +261,7 @@ def build_train_step(cfg: ModelConfig, fed: FedConfig, mesh, shape: ShapeConfig,
                 QYs[k]))
             for k in state.server}
         k_srv = jax.random.fold_in(k_q, n_slots + 7)
-        msg_srv = tree_encode(quant, k_srv, state.server, hints_down)
+        msg_srv = tree_encode(quant_down, k_srv, state.server, hints_down)
 
         if unroll_slots:
             cls = [slot_update(sl(state.clients, i), sl(Ys, i), k_srv,

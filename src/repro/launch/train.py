@@ -21,7 +21,10 @@ with the standardized metrics schema (``sim_time``, ``bits_up``,
 ``lax.scan`` chunks, one host sync per chunk) for algorithms with the
 ``device_round`` capability; ``--kernel-backend`` picks the compression
 pipeline's kernel implementation (jnp / pallas_interpret / pallas) on both
-execution paths.
+execution paths. ``--codec-up`` / ``--codec-down`` select the per-direction
+compression codec by registry name (``repro.compression.codecs``) for every
+algorithm — e.g. ``--codec-up lattice_packed --bits 4`` halves the uplink
+wire bytes, ``--codec-up scalar`` runs the FedPAQ-style baseline.
 
 Example (the (b) end-to-end driver — ~100M-param model, a few hundred
 rounds; on the spmd path the client count IS the mesh data axis, so grow
@@ -137,7 +140,21 @@ def main():
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--quantizer", default="lattice")
-    ap.add_argument("--transport", default="dequant_psum")
+    ap.add_argument("--codec-up", default="",
+                    help="uplink codec spec (repro.compression.codecs "
+                         "registry: lattice|lattice_packed|topk_ef|scalar|"
+                         "identity, with name:key=val params, e.g. "
+                         "'lattice_packed:bits=4'); empty derives from "
+                         "--quantizer/--bits")
+    ap.add_argument("--codec-down", default="",
+                    help="downlink codec spec (same registry / syntax as "
+                         "--codec-up)")
+    ap.add_argument("--transport", default="dequant_psum",
+                    help="mesh aggregation: dequant_psum|code_allgather|"
+                         "shard_local|shard_local_codes|shard_local_rs "
+                         "(the shard_local* family runs the shard_map "
+                         "exchange with the psum / packed-code all-gather "
+                         "/ reduce-scatter transport)")
     ap.add_argument("--kernel-backend", default="jnp",
                     choices=["jnp", "pallas_interpret", "pallas"],
                     help="compression-pipeline kernel implementation, "
@@ -156,6 +173,7 @@ def main():
     fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
                     local_steps=args.local_steps, lr=args.lr,
                     bits=args.bits, quantizer=args.quantizer,
+                    codec_up=args.codec_up, codec_down=args.codec_down,
                     transport=args.transport,
                     kernel_backend=args.kernel_backend)
     key = jax.random.PRNGKey(args.seed)

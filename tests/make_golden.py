@@ -1,0 +1,58 @@
+"""Regenerate tests/golden_pr3.npz — the PR 3 bit-for-bit anchor.
+
+Runs a deterministic 3-round slice of the core registry algorithms through
+the PUBLIC API (make_algorithm + round) and stores the resulting server
+vectors plus the per-round bit counters. The committed .npz was produced by
+the PR 3 tree, BEFORE the codec/transport redesign: the redesigned default
+path (``lattice`` codec both directions) must reproduce it exactly, which is
+what ``tests/test_codecs.py::test_default_lattice_matches_pr3_golden`` pins.
+
+    PYTHONPATH=src python tests/make_golden.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.data import make_federated_classification
+from repro.data.synthetic import client_batch
+from repro.fed import make_algorithm
+from repro.models.mlp import init_mlp_classifier, mlp_loss
+from repro.utils.tree import tree_flatten_vector
+
+GOLDEN = {
+    "quafl": dict(),
+    "quafl_scaffold": dict(),
+    "fedavg": dict(),
+    "fedbuff_device": dict(buffer_size=2, quantize=True,
+                           quantizer="lattice"),
+}
+
+
+def main(path="tests/golden_pr3.npz"):
+    fed = FedConfig(n_clients=6, s=3, local_steps=2, lr=0.3, bits=8)
+    part, _ = make_federated_classification(0, fed.n_clients, d=16,
+                                            n_classes=4)
+    params0, _ = init_mlp_classifier(jax.random.PRNGKey(0), 16, 32, 4)
+    bf = lambda dd, k: client_batch(k, dd, 16)
+    out = {}
+    for name, kw in GOLDEN.items():
+        alg = make_algorithm(name, fed, loss_fn=mlp_loss, template=params0,
+                             batch_fn=bf, **kw)
+        state = alg.init(params0)
+        key = jax.random.PRNGKey(7)
+        ups, downs = [], []
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            state, m = alg.round(state, part, sub)
+            ups.append(float(m["bits_up"]))
+            downs.append(float(m["bits_down"]))
+        out[f"{name}/server"] = np.asarray(
+            tree_flatten_vector(alg.eval_params(state)))
+        out[f"{name}/bits_up"] = np.asarray(ups)
+        out[f"{name}/bits_down"] = np.asarray(downs)
+    np.savez(path, **out)
+    print(f"wrote {len(out)} arrays to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -151,6 +151,22 @@ with mesh:
             np.asarray(servers["jnp"][k], np.float32),
             np.asarray(servers["pallas_interpret"][k], np.float32),
             rtol=2e-5, atol=2e-5, err_msg=k)
+    # transport registry: the three shard_map client-sum strategies (fp32
+    # psum / packed-code all-gather / the new reduce-scatter fusion) must
+    # compute the SAME aggregate — only the bytes on the wire differ
+    for tr in ("shard_local_codes", "shard_local_rs"):
+        step_tr, _, sh_tr = build_train_step(cfg, fed, mesh, shape,
+                                             fed_mode="client_dp",
+                                             transport=tr)
+        st_tr, m_tr = jax.jit(step_tr, in_shardings=sh_tr)(
+            st, {"tokens": toks}, key)
+        assert np.isfinite(float(m_tr["quant_err_sq"])), tr
+        srv_tr = jax.device_get(st_tr.server)
+        for k in servers["jnp"]:
+            np.testing.assert_allclose(
+                np.asarray(srv_tr[k], np.float32),
+                np.asarray(servers["jnp"][k], np.float32),
+                rtol=2e-5, atol=2e-5, err_msg=f"{tr}:{k}")
     # serve step lowers + compiles on the same mesh
     sshape = ShapeConfig("d", 64, 8, "decode")
     sstep, p_spec, c_spec, ssh = build_serve_step(cfg, mesh, sshape)

@@ -30,7 +30,8 @@ from repro.models.mlp import init_mlp_classifier, mlp_loss
 from repro.utils.tree import tree_flatten_vector
 
 ALL_NAMES = ("quafl", "fedavg", "fedbuff", "sequential", "quafl_scaffold",
-             "adaptive_quafl", "fedbuff_device", "spmd")
+             "adaptive_quafl", "fedbuff_device", "spmd",
+             "compressed_fedavg")
 
 # spmd wraps the mesh-sharded LM train step: it needs a ModelConfig and
 # token data, so the MLP-task smoke loops skip it (tests/test_engine.py
