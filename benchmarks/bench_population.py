@@ -1,0 +1,105 @@
+"""Population-engine benchmarks: round cost vs population size N, and the
+participation specs at an equal simulated-clock budget.
+
+Two sections, both landing in ``BENCH_algorithms.json``:
+
+  * **scale** (``alg_pop_n*`` rows) — the scanned engine's ``us_per_round``
+    at N=10^3 / 10^4 / 10^5 clients with the cohort FIXED at s=8 on a flat
+    d=256 task. The population store turns N into memory instead of
+    per-round work (O(s·d) gather/scatter, Floyd's O(s^2) sampler above
+    ``DENSE_SAMPLE_MAX``), so the column must stay FLAT — the
+    ``perf_smoke`` gate in ``tests/test_population.py`` enforces 1.5x.
+  * **participation** (``alg_pop_part_*`` rows) — uniform vs
+    gamma_straggler vs cyclic availability on the shared non-iid
+    classification task at an equal sim-time budget: same algorithm, same
+    clock, only WHO answers the polls differs. Cyclic availability is the
+    heterogeneity stressor (only one phase group reachable per window);
+    the derived fields carry the accuracy each schedule reaches.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.fed import make_algorithm, simulate
+from repro.models.mlp import mlp_loss
+from benchmarks.common import batch_fn, emit, emit_curve, setup
+
+
+def _flat_alg(n_clients: int, d: int = 256):
+    """O(d)-gradient flat-model task (see bench_algorithms._flat_task) with
+    a SHARED tiny batch pool: per-step compute and data stay negligible at
+    every N, so the timing isolates population-store round cost."""
+    fed = FedConfig(n_clients=n_clients, s=8, local_steps=2, lr=0.01,
+                    quantizer="none")
+    key = jax.random.PRNGKey(0)
+    params0 = {"w": 0.01 * jax.random.normal(key, (d,), jnp.float32)}
+    data = {"c": jnp.ones((1, 4), jnp.float32)}
+
+    def loss_fn(params, batch):
+        w = params["w"]
+        return 0.5 * jnp.mean(batch["c"]) * jnp.sum(w * w), {}
+
+    def bf(client_data, k):
+        return {"c": client_data["c"]}
+
+    alg = make_algorithm("quafl", fed, loss_fn=loss_fn, template=params0,
+                         batch_fn=bf)
+    return alg, params0, data
+
+
+def _scale_section(quick: bool):
+    rounds = 10 if quick else 40
+    chunk = 5 if quick else 10
+    sizes = (1_000, 10_000) if quick else (1_000, 10_000, 100_000)
+    base_us = None
+    for n in sizes:
+        alg, params0, data = _flat_alg(n)
+        for _ in range(2):   # compile+warmup, then the timed run
+            tr = simulate(alg, params0, data, jax.random.PRNGKey(3),
+                          rounds=rounds, eval_every=0, scan_chunk=chunk)
+        base_us = base_us or tr.us_per_round
+        emit(f"alg_pop_n{n}", tr.us_per_round,
+             f"n={n};s=8;d=256;rounds={rounds};chunk={chunk};"
+             f"engine={tr.engine};"
+             f"vs_n1000={tr.us_per_round / base_us:.2f}x")
+
+
+def _participation_section(rounds: int):
+    fed = FedConfig(n_clients=64, s=8, local_steps=5, lr=0.3, bits=10,
+                    swt=10.0)
+    part, test, params0 = setup(fed, iid=False)
+    budget = rounds * (fed.swt + fed.sit)
+
+    def eval_fn(p):
+        loss, metr = mlp_loss(p, test)
+        return {"loss": float(loss), "acc": float(metr["acc"])}
+
+    specs = {
+        "uniform": "uniform",
+        "gamma": "gamma_straggler:strength=2",
+        "cyclic": "cyclic:period=8,phase_groups=4",
+    }
+    for label, spec in specs.items():
+        alg = make_algorithm("quafl", fed, loss_fn=mlp_loss,
+                             template=params0, batch_fn=batch_fn,
+                             participation=spec)
+        tr = simulate(alg, params0, part, jax.random.PRNGKey(7),
+                      until_sim_time=budget,
+                      eval_every=max(rounds // 6, 1), eval_fn=eval_fn)
+        f = tr.final
+        emit(f"alg_pop_part_{label}", tr.us_per_round,
+             f"spec={spec};acc={f['acc']:.3f};loss={f['loss']:.3f};"
+             f"sim_t={f['sim_time']:.0f};rounds={tr.rounds};"
+             f"n={fed.n_clients};s={fed.s}")
+        emit_curve(f"alg_pop_part_{label}", [
+            (r["round"], r["sim_time"], r["loss"], r["acc"],
+             r["bits_up_total"] + r["bits_down_total"]) for r in tr.rows])
+
+
+def main(rounds: int = 100):
+    _scale_section(quick=rounds < 50)
+    _participation_section(rounds)
+
+
+if __name__ == "__main__":
+    main()

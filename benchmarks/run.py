@@ -4,10 +4,12 @@
 prints ``name,us_per_call,derived`` CSV (+ ``# curve:`` blocks carrying the
 convergence data each paper figure plots) and writes every emitted row to a
 machine-readable JSON baseline so subsequent PRs have a perf trajectory to
-diff against: the ``algorithms`` bench (the whole registry under one clock)
-lands in ``BENCH_algorithms.json``, everything else in
+diff against: the ``algorithms`` and ``population`` benches (the whole
+registry under one clock; the population engine's scale/participation rows)
+land in ``BENCH_algorithms.json``, everything else in
 ``BENCH_exchange.json``. ``--only`` filters benchmarks by name substring
-(e.g. ``--only exchange``, ``--only algorithms``).
+(e.g. ``--only exchange``, ``--only population``); record names are the
+baselines' merge keys, so duplicates across benches abort the run.
 """
 import json
 import os
@@ -17,8 +19,9 @@ import time
 from benchmarks import (bench_algorithms, bench_averaging, bench_bits,
                         bench_bits_accounting, bench_exchange,
                         bench_extensions, bench_fedbuff, bench_kernels,
-                        bench_local_steps, bench_peers, bench_quantizer,
-                        bench_roofline, bench_swt, bench_time)
+                        bench_local_steps, bench_peers, bench_population,
+                        bench_quantizer, bench_roofline, bench_swt,
+                        bench_time)
 from benchmarks.common import RECORDS
 
 BENCHES = [
@@ -35,13 +38,15 @@ BENCHES = [
     ("kernels", bench_kernels.main),
     ("exchange", bench_exchange.main),
     ("algorithms", bench_algorithms.main),
+    ("population", bench_population.main),
     ("roofline", bench_roofline.main),
 ]
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_ROOT, "BENCH_exchange.json")
 # benches whose records get their own baseline file (name -> path)
-JSON_TARGETS = {"algorithms": os.path.join(_ROOT, "BENCH_algorithms.json")}
+JSON_TARGETS = {"algorithms": os.path.join(_ROOT, "BENCH_algorithms.json"),
+                "population": os.path.join(_ROOT, "BENCH_algorithms.json")}
 # quick-scale numbers are not comparable with the committed baselines, so
 # they land under the gitignored bench_out/ instead of the repo root
 QUICK_DIR = os.path.join(_ROOT, "bench_out")
@@ -98,6 +103,13 @@ def main() -> None:
         print("# no records emitted (bad --only filter?); leaving JSON "
               "baselines untouched")
         return
+    # record names are the merge keys of the committed baselines: a
+    # duplicate would silently overwrite another bench's row, so fail loud
+    names = [r["name"] for r in RECORDS]
+    dups = sorted({n for n in names if names.count(n) > 1})
+    if dups:
+        raise SystemExit(f"duplicate bench record names {dups}: two "
+                         f"benches would clobber each other's baseline row")
     for path, records in by_target.items():
         if not records:
             continue

@@ -185,6 +185,11 @@ class FedConfig:
     lam_slow: float = 0.125
     swt: float = 10.0              # server waiting time between calls
     sit: float = 1.0               # server interaction time
+    # client participation/availability spec (repro.fed.population
+    # registry: 'uniform' | 'gamma_straggler[:strength=a]' |
+    # 'cyclic:period=P,phase_groups=G'); "" = uniform — the paper's s-of-n
+    # sampling without replacement, preserved draw-for-draw
+    participation: str = ""
     # distribution of H_i^t used inside the SPMD train_step
     # 'binomial' -> H ~ Binomial(K, p_i); faithful "partial progress" draws
     h_dist: str = "binomial"

@@ -32,13 +32,19 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
 from repro.core.quafl import QuAFL, QuaflState
-from repro.fed.clock import lazy_h_steps, sample_clients
+from repro.fed.clock import lazy_h_steps, sample_clients  # noqa: F401
+from repro.fed.population import gather_rows, scatter_rows, with_rows
 
 
 class ScaffoldState(NamedTuple):
     base: QuaflState
     c_server: jnp.ndarray      # server control variate (d,)
-    c_clients: jnp.ndarray     # per-client control variates (n, d)
+
+    @property
+    def c_clients(self):
+        """Per-client control variates (n, d) — a row of the base state's
+        population store (gathered/scattered with the model rows)."""
+        return self.base.pop.rows["control"]
 
     @property
     def bits_sent(self):
@@ -58,8 +64,10 @@ class QuaflScaffold(QuAFL):
         base = super().init(params0)
         n = self.fed.n_clients
         z = jnp.zeros_like(base.server)
-        return ScaffoldState(base=base, c_server=z,
-                             c_clients=jnp.zeros((n, z.shape[0])))
+        # the control variates are one more per-client row of the store
+        base = base._replace(pop=with_rows(
+            base.pop, control=jnp.zeros((n, z.shape[0]))))
+        return ScaffoldState(base=base, c_server=z)
 
     def _local_progress_controlled(self, flat, data_i, h_steps, key, c_corr):
         K, eta = self.fed.local_steps, self.fed.lr
@@ -82,13 +90,14 @@ class QuaflScaffold(QuAFL):
         n, s = fed.n_clients, fed.s
         base = state.base
         k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
-        idx = sample_clients(k_sel, n, s)
-        elapsed = base.sim_time + fed.swt + fed.sit - base.last_time[idx]
-        h_steps = lazy_h_steps(k_h, jnp.asarray(self.lam)[idx], elapsed,
-                               fed.local_steps)
+        idx = self.part.sample(k_sel, base.t, n, s, base.pop.rows["lam"])
+        got = gather_rows(base.pop, idx)
+        elapsed = base.sim_time + fed.swt + fed.sit - got["last_time"]
+        h_steps = self.part.h_steps(k_h, idx, got["lam"], elapsed,
+                                    fed.local_steps)
 
-        cl = base.clients[idx]
-        c_i = state.c_clients[idx]
+        cl = got["model"]
+        c_i = got["control"]
         c_corr = c_i - state.c_server[None, :]
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
@@ -135,20 +144,19 @@ class QuaflScaffold(QuAFL):
         bits_down = 2 * self.codec_down.message_bits(self.d)
         dt = fed.swt + fed.sit
         new_time = base.sim_time + dt
+        # one scatter covers models, interaction times, AND control rows
+        # (codec/EF rows pass through untouched — scaffold runs stateless
+        # encodes — keeping the pytree structure stable for the scan)
         nbase = QuaflState(
-            server=server_new, clients=base.clients.at[idx].set(cl_new),
+            server=server_new,
+            pop=scatter_rows(base.pop, idx,
+                             {"model": cl_new, "last_time": new_time,
+                              "control": QC}),
             t=base.t + 1, sim_time=new_time,
-            last_time=base.last_time.at[idx].set(new_time),
             bits_up=base.bits_up + bits_up,
             bits_down=base.bits_down + bits_down,
-            srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv,
-            # carry the codec state through unchanged (scaffold runs
-            # stateless encodes, but the pytree structure must be stable
-            # for the scanned engine)
-            codec_up_state=base.codec_up_state)
-        new_state = ScaffoldState(
-            base=nbase, c_server=c_server_new,
-            c_clients=state.c_clients.at[idx].set(QC))
+            srv_dist_est=0.5 * base.srv_dist_est + 0.5 * hint_srv)
+        new_state = ScaffoldState(base=nbase, c_server=c_server_new)
         rel_err = jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
                            / (jnp.linalg.norm(Y, axis=1) + 1e-9))
         metrics = {"sim_time": new_time,

@@ -39,12 +39,17 @@ import numpy as np
 from repro.compression.codecs import (IdentityCodec, init_client_states,
                                       resolve_codec)
 from repro.configs.base import FedConfig
-from repro.fed.clock import sample_clients, speeds_for, straggler_round_time
+from repro.fed.clock import (sample_clients, speeds_for,  # noqa: F401
+                             straggler_round_time)
+from repro.fed.population import (Population, build_population,
+                                  resolve_participation, scatter_rows,
+                                  shard_population)
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
 
 
 class FedAvgState(NamedTuple):
     server: jnp.ndarray
+    pop: Population            # per-client rows: lam, group
     t: jnp.ndarray
     sim_time: jnp.ndarray
     bits_up: jnp.ndarray
@@ -65,6 +70,8 @@ class FedAvg:
     uniform_speeds: bool = False
     uplink: Any = None                  # codec spec (default: identity)
     downlink: Any = None                # codec spec (default: identity)
+    participation: Any = None           # spec (default: fed.participation)
+    client_mesh: Any = None             # shard the store's client axis
     # subclasses override the per-direction codec defaults (None = the
     # legacy fed.quantizer map)
     _codec_default_up = "identity"
@@ -73,6 +80,7 @@ class FedAvg:
     def __post_init__(self):
         n = self.fed.n_clients
         self.lam = speeds_for(self.fed, n, uniform=self.uniform_speeds)
+        self.part = resolve_participation(self.participation, self.fed)
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
         self.codec_up = resolve_codec(self.uplink, self.fed, direction="up",
@@ -86,8 +94,16 @@ class FedAvg:
         # (fedavg clients keep no cross-round memory); compressed_fedavg
         # threads real per-client error-feedback residuals
 
+    def _pop0(self, **extra_rows) -> Population:
+        pop = build_population(self.fed, self.fed.n_clients, lam=self.lam,
+                               **extra_rows)
+        if self.client_mesh is not None:
+            pop = shard_population(pop, self.client_mesh)
+        return pop
+
     def init(self, params0) -> FedAvgState:
         return FedAvgState(server=tree_flatten_vector(params0),
+                           pop=self._pop0(),
                            t=jnp.zeros((), jnp.int32),
                            sim_time=jnp.zeros(()), bits_up=jnp.zeros(()),
                            bits_down=jnp.zeros(()))
@@ -119,7 +135,7 @@ class FedAvg:
         # codec keys derive via fold_in so the legacy (identity/identity)
         # key schedule — and hence the PR 3 trace — is untouched
         k_q = jax.random.fold_in(key, 17)
-        idx = sample_clients(k_sel, n, s)
+        idx = self.part.sample(k_sel, state.t, n, s, state.pop.rows["lam"])
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
 
@@ -157,7 +173,8 @@ class FedAvg:
                                / (jnp.linalg.norm(models, axis=1) + 1e-9))
         server_new = jnp.mean(QY, 0)
         # slowest sampled client: sum of K Exp(λ) step times
-        dt = straggler_round_time(k_t, jnp.asarray(self.lam)[idx], K, fed.sit)
+        dt = straggler_round_time(k_t, state.pop.rows["lam"][idx], K,
+                                  fed.sit)
         # wire accounting by the codecs: s unicasts each way
         bits_up = s * self.codec_up.message_bits(self.d)
         bits_down = s * self.codec_down.message_bits(self.d)
@@ -170,7 +187,7 @@ class FedAvg:
             "quant_err": rel_err,
             "bits": jnp.asarray(bits_up + bits_down, jnp.float32),
         }
-        return FedAvgState(server=server_new, t=state.t + 1,
+        return FedAvgState(server=server_new, pop=state.pop, t=state.t + 1,
                            sim_time=state.sim_time + dt,
                            bits_up=state.bits_up + bits_up,
                            bits_down=state.bits_down + bits_down), metrics
@@ -189,13 +206,18 @@ class FedAvg:
 
 class CompressedFedAvgState(NamedTuple):
     server: jnp.ndarray
+    pop: Population            # rows: lam, group, codec_up (EF residuals)
     t: jnp.ndarray
     sim_time: jnp.ndarray
     bits_up: jnp.ndarray
     bits_down: jnp.ndarray
     srv_prev: jnp.ndarray      # previous server model (downlink decode ref)
     srv_dist_est: jnp.ndarray  # running ‖X_t − X_{t-1}‖ (downlink Enc hint)
-    codec_up_state: Any = ()   # per-client error-feedback residuals
+
+    @property
+    def codec_up_state(self):
+        """Per-client error-feedback residuals — a population row."""
+        return self.pop.rows["codec_up"]
 
     @property
     def bits_sent(self):
@@ -229,13 +251,13 @@ class CompressedFedAvg(FedAvg):
     def init(self, params0) -> CompressedFedAvgState:
         x0 = tree_flatten_vector(params0)
         return CompressedFedAvgState(
-            server=x0, t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
+            server=x0, pop=self._pop0(codec_up=self._codec_state0()),
+            t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
             bits_up=jnp.zeros(()), bits_down=jnp.zeros(()),
             # a COPY: server and srv_prev must never alias (the scanned
             # engine donates the state, and XLA rejects donating one
             # buffer twice)
-            srv_prev=jnp.array(x0), srv_dist_est=jnp.ones(()) * 1e-3,
-            codec_up_state=self._codec_state0())
+            srv_prev=jnp.array(x0), srv_dist_est=jnp.ones(()) * 1e-3)
 
     @partial(jax.jit, static_argnums=0)
     def round(self, state: CompressedFedAvgState, data, key):
@@ -243,7 +265,7 @@ class CompressedFedAvg(FedAvg):
         n, s, K = fed.n_clients, fed.s, fed.local_steps
         k_sel, k_loc, k_t = jax.random.split(key, 3)
         k_q = jax.random.fold_in(key, 17)
-        idx = sample_clients(k_sel, n, s)
+        idx = self.part.sample(k_sel, state.t, n, s, state.pop.rows["lam"])
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
 
@@ -261,7 +283,7 @@ class CompressedFedAvg(FedAvg):
         kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
         hints = jnp.linalg.norm(deltas, axis=1) + 1e-12
         zero = jnp.zeros((self.d,), jnp.float32)
-        codec_state_new = state.codec_up_state
+        pop_new = state.pop
 
         if self.codec_up.stateful:
             cs = jax.tree_util.tree_map(lambda a: a[idx],
@@ -272,9 +294,8 @@ class CompressedFedAvg(FedAvg):
                 return self.codec_up.decode(kk, msg, zero), cs_i
 
             QD, cs_new = jax.vmap(enc_dec)(deltas, kq_cl, hints, cs)
-            codec_state_new = jax.tree_util.tree_map(
-                lambda full, ns: full.at[idx].set(ns),
-                state.codec_up_state, cs_new)
+            # scatter the sampled clients' EF residuals back (O(s·d))
+            pop_new = scatter_rows(state.pop, idx, {"codec_up": cs_new})
         else:
             def enc_dec(dl, kk, hint):
                 return self.codec_up.decode(
@@ -285,18 +306,19 @@ class CompressedFedAvg(FedAvg):
         server_new = state.server - self.server_lr * jnp.mean(QD, 0)
         rel_err = jnp.mean(jnp.linalg.norm(QD - deltas, axis=1)
                            / (jnp.linalg.norm(deltas, axis=1) + 1e-12))
-        dt = straggler_round_time(k_t, jnp.asarray(self.lam)[idx], K, fed.sit)
+        dt = straggler_round_time(k_t, state.pop.rows["lam"][idx], K,
+                                  fed.sit)
         bits_up = s * self.codec_up.message_bits(self.d)
         bits_down = self.codec_down.message_bits(self.d)  # ONE broadcast
         new_time = state.sim_time + dt
         new_state = CompressedFedAvgState(
-            server=server_new, t=state.t + 1, sim_time=new_time,
+            server=server_new, pop=pop_new, t=state.t + 1,
+            sim_time=new_time,
             bits_up=state.bits_up + bits_up,
             bits_down=state.bits_down + bits_down,
             srv_prev=state.server,
             srv_dist_est=0.5 * state.srv_dist_est
-            + 0.5 * jnp.linalg.norm(server_new - state.server),
-            codec_up_state=codec_state_new)
+            + 0.5 * jnp.linalg.norm(server_new - state.server))
         metrics = {
             "sim_time": new_time,
             "round_time": dt,

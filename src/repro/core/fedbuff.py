@@ -53,6 +53,8 @@ from repro.configs.base import FedConfig
 from repro.fed.clock import (ArrivalQueue, completion_time,
                              completion_time_device, speeds_for)
 from repro.fed.engine import RingBuffer, ring_init, ring_pop, ring_push
+from repro.fed.population import (Population, build_population,
+                                  shard_population, with_rows)
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
 
 
@@ -289,17 +291,29 @@ class FedBuff:
 class FedBuffDeviceState(NamedTuple):
     """Pure-pytree FedBuff state: the python heap becomes a fixed-capacity
     :class:`repro.fed.engine.RingBuffer` (one pending completion per client,
-    so capacity = n_clients and the buffer is always exactly full)."""
+    so capacity = n_clients and the buffer is always exactly full). The
+    per-client rows — restart models, draw counters, speeds — live in the
+    :class:`Population` store; events touch single rows (O(d)), so the
+    population size only sets memory, not per-event cost."""
     server: jnp.ndarray        # (d,)
-    start: jnp.ndarray         # (n, d) model each client restarted from
+    pop: Population            # rows: start (n,d), occ (n,) i32, lam, group
     queue: RingBuffer          # pending completion events
-    occ: jnp.ndarray           # (n,) i32 per-client draw counters
     sim_time: jnp.ndarray      # f32 scalar
     t: jnp.ndarray             # i32 server updates applied
     bits_up: jnp.ndarray       # f32 scalar
     bits_down: jnp.ndarray     # f32 scalar
     jkey: jax.Array            # event key stream (local steps + quantize)
     live: jnp.ndarray          # bool: queue/jkey seeded by the first round
+
+    @property
+    def start(self):
+        """(n, d) model each client restarted from — a population row."""
+        return self.pop.rows["start"]
+
+    @property
+    def occ(self):
+        """(n,) per-client completion-draw counters — a population row."""
+        return self.pop.rows["occ"]
 
     @property
     def bits_sent(self):
@@ -337,6 +351,7 @@ class FedBuffDevice(FedBuff):
     scanned run is bit-for-bit the eager run.
     """
     completion_table: Optional[np.ndarray] = None
+    client_mesh: Any = None             # shard the store's client axis
 
     def __post_init__(self):
         super().__post_init__()
@@ -350,14 +365,18 @@ class FedBuffDevice(FedBuff):
     def init(self, params0) -> FedBuffDeviceState:
         server = tree_flatten_vector(params0)
         n = self.fed.n_clients
+        pop = build_population(self.fed, n, lam=self.lam,
+                               start=jnp.tile(server[None], (n, 1)),
+                               occ=jnp.zeros((n,), jnp.int32))
+        if self.client_mesh is not None:
+            pop = shard_population(pop, self.client_mesh)
         return FedBuffDeviceState(
-            server=server, start=jnp.tile(server[None], (n, 1)),
-            queue=ring_init(n), occ=jnp.zeros((n,), jnp.int32),
+            server=server, pop=pop, queue=ring_init(n),
             sim_time=jnp.zeros(()), t=jnp.zeros((), jnp.int32),
             bits_up=jnp.zeros(()), bits_down=jnp.zeros(()),
             jkey=jax.random.PRNGKey(0), live=jnp.zeros((), bool))
 
-    def _duration(self, kt, i, occ_i):
+    def _duration(self, kt, i, occ_i, lam_i):
         """Client i's next K-step duration: seed-bridge table lookup when
         pinned, else a device Gamma(K, 1/λ_i) draw. A table exhausted
         mid-simulation (more completions than the bridge replayed) poisons
@@ -366,8 +385,7 @@ class FedBuffDevice(FedBuff):
         if self._table_j is not None:
             return jnp.where(occ_i < self._table_j.shape[1],
                              self._table_j[i, occ_i], jnp.nan)
-        return completion_time_device(kt, self.fed.local_steps,
-                                      self._lam_j[i])
+        return completion_time_device(kt, self.fed.local_steps, lam_i)
 
     def _seeded(self, state: FedBuffDeviceState, key):
         """First-round seeding: initial completion draws for every client
@@ -379,7 +397,7 @@ class FedBuffDevice(FedBuff):
             kts = jax.random.split(jax.random.fold_in(key, 0), n)
             times = jax.vmap(completion_time_device,
                              in_axes=(0, None, 0))(
-                kts, self.fed.local_steps, self._lam_j)
+                kts, self.fed.local_steps, state.pop.rows["lam"])
         queue = RingBuffer(times=times.astype(jnp.float32),
                            clients=jnp.arange(n, dtype=jnp.int32))
         return queue, jnp.ones((n,), jnp.int32), key
@@ -390,6 +408,7 @@ class FedBuffDevice(FedBuff):
         ``buffer_size`` completion events, fully on device."""
         fed = self.fed
         Z, d = self.buffer_size, self.d
+        lam_row = state.pop.rows["lam"]
         queue, occ, jkey = jax.lax.cond(
             state.live,
             lambda: (state.queue, state.occ, state.jkey),
@@ -431,7 +450,7 @@ class FedBuffDevice(FedBuff):
             else:
                 kt = jkey   # bridge mode consumes no extra key (numpy rng
             #               # drew the durations in the legacy stream)
-            dur = self._duration(kt, i, occ[i])
+            dur = self._duration(kt, i, occ[i], lam_row[i])
             occ = occ.at[i].add(1)
             queue = ring_push(queue, t_now + dur, i)
             return (queue, occ, jkey, server, start, t_now, buffer,
@@ -448,8 +467,9 @@ class FedBuffDevice(FedBuff):
                                 jnp.float32)
         new_time = t_now.astype(jnp.float32)
         new_state = FedBuffDeviceState(
-            server=server, start=start, queue=queue, occ=occ,
-            sim_time=new_time, t=state.t + 1,
+            server=server,
+            pop=with_rows(state.pop, start=start, occ=occ),
+            queue=queue, sim_time=new_time, t=state.t + 1,
             bits_up=state.bits_up + bits_up,
             bits_down=state.bits_down + bits_down,
             jkey=jkey, live=jnp.ones((), bool))

@@ -1,10 +1,16 @@
 """QuAFL — paper Algorithm 1, as a jit-able JAX round function.
 
 The optimization state is kept as FLAT fp32 vectors (the paper's model is
-x ∈ R^d): ``server`` (X_t) and ``clients`` (X^i, stacked (n, d)). The loss is
-evaluated by unflattening against a template pytree, so any model (the MLP
-family from the paper's experiments or a transformer from the assigned zoo)
-plugs in through ``loss_fn(params_pytree, batch)``.
+x ∈ R^d): ``server`` (X_t) plus a :class:`repro.fed.population.Population`
+store holding every per-client row — X^i models stacked (n, d), speeds λ,
+last-interaction times, codec/EF residuals. Rounds reach the store only
+through an O(s·d) gather/scatter of the sampled clients' rows, and WHO is
+sampled is a first-class ``Participation`` spec (``uniform`` — the paper's
+draw — ``gamma_straggler``, ``cyclic:period=P,phase_groups=G``), so the
+population size n is a spec, not a hot-path cost. The loss is evaluated by
+unflattening against a template pytree, so any model (the MLP family from
+the paper's experiments or a transformer from the assigned zoo) plugs in
+through ``loss_fn(params_pytree, batch)``.
 
 Faithfulness notes:
  * Per App. B.1, local steps of unsampled clients have no observable effect,
@@ -72,20 +78,48 @@ from repro.configs.base import FedConfig
 # canonical home is repro.fed.clock; re-exported here for compatibility
 from repro.fed.clock import (client_speeds, expected_steps,  # noqa: F401
                              lazy_h_steps, sample_clients, speeds_for)
+from repro.fed.population import (Population, build_population, gather_rows,
+                                  resolve_participation, scatter_rows,
+                                  shard_population, with_rows)
 from repro.utils.tree import (tree_flatten_vector, tree_unflatten_vector)
 
 
 class QuaflState(NamedTuple):
+    """Server scalars + the :class:`Population` store of per-client rows.
+
+    Per-client state (client models X^i, last-interaction times, codec/EF
+    residuals, speeds) lives as stacked rows of ``pop``; rounds touch it
+    only through an O(s·d) gather/scatter of the s sampled clients' rows,
+    so the state layout scales to populations of 10^5+ clients. The legacy
+    field names stay available as read-only views."""
     server: jnp.ndarray        # X_t  (d,)
-    clients: jnp.ndarray       # X^i  (n, d)
+    pop: Population            # rows: model (n,d), last_time (n,), lam,
+    #                          # group, codec_up (EF state or ())
     t: jnp.ndarray             # server round
     sim_time: jnp.ndarray      # simulated wall-clock
-    last_time: jnp.ndarray     # (n,) last interaction time per client
     bits_up: jnp.ndarray       # cumulative client->server bits
     bits_down: jnp.ndarray     # cumulative server->client bits
     srv_dist_est: jnp.ndarray  # running ‖X_t − X^i‖ estimate (server Enc hint)
-    codec_up_state: Any = ()   # per-client encoder state of a stateful
-    #                          # uplink codec (error feedback); () otherwise
+
+    @property
+    def clients(self):
+        """X^i stacked (n, d) — view into the population store."""
+        return self.pop.rows["model"]
+
+    @property
+    def last_time(self):
+        """(n,) last interaction time per client — view into the store."""
+        return self.pop.rows["last_time"]
+
+    @property
+    def codec_up_state(self):
+        """Per-client uplink-codec (EF) state; () for stateless codecs."""
+        return self.pop.rows["codec_up"]
+
+    def with_clients(self, clients) -> "QuaflState":
+        """Copy with the stacked client models replaced (test helper —
+        the NamedTuple ``_replace`` can't target rows inside ``pop``)."""
+        return self._replace(pop=with_rows(self.pop, model=clients))
 
     @property
     def bits_sent(self):
@@ -104,6 +138,8 @@ class QuAFL:
     exchange_impl: str = "pipeline"        # 'pipeline' | 'reference' (oracle)
     uplink: Any = None                     # codec spec (default: fed-derived)
     downlink: Any = None                   # codec spec (default: fed-derived)
+    participation: Any = None              # spec (default: fed.participation)
+    client_mesh: Any = None                # shard the store's client axis
 
     def __post_init__(self):
         backend = getattr(self.fed, "kernel_backend", "jnp")
@@ -135,6 +171,8 @@ class QuAFL:
         # hoisted once — the traced round body only indexes these
         self._lam_j = jnp.asarray(self.lam)
         self._eta_j = jnp.asarray(self.eta_i)
+        # who enters a round is a first-class spec on the clock
+        self.part = resolve_participation(self.participation, self.fed)
         self.d = int(sum(np.prod(x.shape) for x in
                          jax.tree_util.tree_leaves(self.template)))
 
@@ -156,13 +194,17 @@ class QuAFL:
     def init(self, params0) -> QuaflState:
         x0 = tree_flatten_vector(params0)
         n = self.fed.n_clients
+        pop = build_population(self.fed, n, lam=self.lam,
+                               model=jnp.tile(x0[None], (n, 1)),
+                               last_time=jnp.zeros((n,)),
+                               codec_up=self._codec_state0())
+        if self.client_mesh is not None:
+            pop = shard_population(pop, self.client_mesh)
         return QuaflState(
-            server=x0, clients=jnp.tile(x0[None], (n, 1)),
+            server=x0, pop=pop,
             t=jnp.zeros((), jnp.int32), sim_time=jnp.zeros(()),
-            last_time=jnp.zeros((n,)), bits_up=jnp.zeros(()),
-            bits_down=jnp.zeros(()),
-            srv_dist_est=jnp.ones(()) * 1e-3,
-            codec_up_state=self._codec_state0())
+            bits_up=jnp.zeros(()), bits_down=jnp.zeros(()),
+            srv_dist_est=jnp.ones(()) * 1e-3)
 
     # ------------------------------------------------------------------
     def _grad(self, flat, batch):
@@ -194,12 +236,17 @@ class QuAFL:
         n, s = fed.n_clients, fed.s
         k_sel, k_h, k_q, k_loc = jax.random.split(key, 4)
 
-        idx = sample_clients(k_sel, n, s)
-        elapsed = state.sim_time + fed.swt + fed.sit - state.last_time[idx]
-        h_steps = lazy_h_steps(k_h, self._lam_j[idx], elapsed,
-                               fed.local_steps)
+        # participation spec on the clock: who answers this round's poll.
+        # Everything below touches the population only through the sampled
+        # rows — O(s·d), independent of n.
+        lam_row = state.pop.rows["lam"]
+        idx = self.part.sample(k_sel, state.t, n, s, lam_row)
+        got = gather_rows(state.pop, idx)
+        elapsed = state.sim_time + fed.swt + fed.sit - got["last_time"]
+        h_steps = self.part.h_steps(k_h, idx, got["lam"], elapsed,
+                                    fed.local_steps)
 
-        cl = state.clients[idx]                                  # (s, d)
+        cl = got["model"]                                        # (s, d)
         data_s = jax.tree_util.tree_map(lambda a: a[idx], data)
         keys = jax.random.split(k_loc, s)
         h_tilde = jax.vmap(self._local_progress)(cl, data_s, h_steps, keys)
@@ -210,7 +257,7 @@ class QuAFL:
         # --- quantized exchange (shared per-interaction keys) -----------
         prog_norm = jnp.linalg.norm(prog, axis=1)
         hints_up = prog_norm + state.srv_dist_est + 1e-8
-        codec_state_new = state.codec_up_state
+        cs_new = None          # sampled clients' updated EF rows (if any)
 
         if self.pipeline is not None:
             # rotated-space engine: one shared rotation per round, all
@@ -230,8 +277,7 @@ class QuAFL:
             kq_cl = jax.random.split(jax.random.fold_in(k_q, 1), s)
 
             if self._thread_ef:
-                cs = jax.tree_util.tree_map(lambda a: a[idx],
-                                            state.codec_up_state)
+                cs = got["codec_up"]            # gathered EF rows (s, ...)
 
                 def enc_dec_up(y, kk, hint, cs_i):
                     msg, cs_i = self.codec_up.encode_stateful(
@@ -239,9 +285,6 @@ class QuAFL:
                     return self.codec_up.decode(kk, msg, state.server), cs_i
 
                 QY, cs_new = jax.vmap(enc_dec_up)(Y, kq_cl, hints_up, cs)
-                codec_state_new = jax.tree_util.tree_map(
-                    lambda full, ns: full.at[idx].set(ns),
-                    state.codec_up_state, cs_new)
             else:
                 def enc_dec_up(y, kk, hint):
                     msg = self.codec_up.encode(kk, y, hint)
@@ -273,7 +316,6 @@ class QuAFL:
                 cl_new = QX
             rel_err = jnp.mean(jnp.linalg.norm(QY - Y, axis=1)
                                / (jnp.linalg.norm(Y, axis=1) + 1e-9))
-        clients_new = state.clients.at[idx].set(cl_new)
 
         # bit accounting, computed BY the codecs' wire formats: s uplink
         # messages (per-client widths under a grouped codec) + ONE downlink
@@ -286,14 +328,18 @@ class QuAFL:
         bits_down = self.codec_down.message_bits(self.d)
         dt = fed.swt + fed.sit
         new_time = state.sim_time + dt
+        # scatter the s updated rows back into the store (O(s·d); untouched
+        # rows pass through by reference so the scan carry stays donatable)
+        updates = {"model": cl_new, "last_time": new_time}
+        if cs_new is not None:
+            updates["codec_up"] = cs_new
         state = QuaflState(
-            server=server_new, clients=clients_new, t=state.t + 1,
-            sim_time=new_time,
-            last_time=state.last_time.at[idx].set(new_time),
+            server=server_new,
+            pop=scatter_rows(state.pop, idx, updates),
+            t=state.t + 1, sim_time=new_time,
             bits_up=state.bits_up + bits_up,
             bits_down=state.bits_down + bits_down,
-            srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv,
-            codec_up_state=codec_state_new)
+            srv_dist_est=0.5 * state.srv_dist_est + 0.5 * hint_srv)
         metrics = {
             "sim_time": new_time,
             "round_time": jnp.asarray(dt, jnp.float32),

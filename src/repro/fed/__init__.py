@@ -2,7 +2,8 @@
 
 One protocol (:class:`FedAlgorithm`: ``init / round / eval_params``), one
 metrics schema (:data:`METRIC_KEYS`), one clock (:mod:`repro.fed.clock`),
-one registry (:func:`make_algorithm`), and one simulation harness
+one registry (:func:`make_algorithm`), one population store + participation
+spec family (:mod:`repro.fed.population`), and one simulation harness
 (:func:`simulate` / :func:`compare`) for every server variant in the repo —
 the paper's apples-to-apples comparison (§5, App. A) as infrastructure.
 
@@ -23,6 +24,16 @@ from repro.fed.engine import (DeviceFedAlgorithm, RingBuffer,  # noqa: F401
                               RoundEngine, fedbuff_completion_table,
                               ring_init, ring_peek, ring_pop, ring_push,
                               ring_size, supports_scan)
+from repro.fed.population import (CyclicParticipation,  # noqa: F401
+                                  GammaStragglerParticipation, Participation,
+                                  Population, UniformParticipation,
+                                  build_population, client_keys, client_mesh,
+                                  floyd_sample, gather_rows,
+                                  lazy_h_steps_per_client,
+                                  register_participation,
+                                  registered_participations,
+                                  resolve_participation, scatter_rows,
+                                  shard_population, uniform_sample, with_rows)
 from repro.fed.registry import (make_algorithm,  # noqa: F401
                                 register_algorithm, registered_algorithms)
 from repro.fed.simulate import Trace, compare, simulate  # noqa: F401

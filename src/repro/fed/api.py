@@ -45,6 +45,15 @@ Algorithms are free to add extra keys (``h_zero_frac``, ``c_norm``,
 algorithm-agnostic. :func:`normalize_metrics` fills any missing schema key
 with its documented default so downstream code can index unconditionally.
 
+**Population & participation**: per-client state (client models, speeds,
+EF residuals, control variates) lives in a :class:`repro.fed.population.
+Population` store of stacked (n, ...) rows inside each algorithm's state;
+rounds touch it through an O(s·row) gather/scatter of the participating
+clients only, and WHO participates is a first-class ``Participation`` spec
+on the clock (``uniform`` / ``gamma_straggler`` / ``cyclic:...``) — so
+``n_clients`` sets memory, not per-round cost, and availability patterns
+are a config axis rather than per-algorithm plumbing.
+
 **Device-round capability** (optional): algorithms whose round body is pure
 traced code — pytree state, device-scalar metrics with a fixed dict
 structure, no host syncs — additionally expose ``device_round(state, data,

@@ -18,7 +18,13 @@ This module is the single home for all three observations — previously the
 plumbing was copy-pasted across ``core/quafl.py``, ``core/fedavg.py`` and
 ``core/fedbuff.py``. Functions are numerically identical to the originals
 (same distributions, same key usage), so seeded runs are unchanged.
-"""
+
+WHO answers a poll is the clock's fourth observation: a first-class
+``Participation`` spec (``uniform`` — bit-for-bit :func:`sample_clients` —
+``gamma_straggler``, ``cyclic:period=P,phase_groups=G``) living in
+:mod:`repro.fed.population` with the sharded per-client state store; the
+spec names are re-exported here so clock-level code can resolve them
+without importing the store."""
 from __future__ import annotations
 
 import heapq
@@ -139,3 +145,21 @@ class ArrivalQueue:
 
     def copy(self) -> "ArrivalQueue":
         return ArrivalQueue(self.events)
+
+
+# ---------------------------------------------------------------------------
+# participation specs (canonical home: repro.fed.population — lazily
+# re-exported here to keep clock -> population import-free; population
+# imports the speed model above)
+# ---------------------------------------------------------------------------
+
+_PARTICIPATION_NAMES = ("Participation", "UniformParticipation",
+                       "GammaStragglerParticipation", "CyclicParticipation",
+                       "resolve_participation", "registered_participations")
+
+
+def __getattr__(name: str):
+    if name in _PARTICIPATION_NAMES:
+        from repro.fed import population
+        return getattr(population, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -166,6 +166,10 @@ def fedbuff_completion_table(key, lam, local_steps: int,
 # the engine: cached scanned-chunk programs
 # ---------------------------------------------------------------------------
 
+# chunk lengths the autotuner probes (each costs one compile + two runs)
+AUTOTUNE_CANDIDATES = (4, 16, 64)
+
+
 class RoundEngine:
     """Runs an algorithm's rounds as jitted ``lax.scan`` chunks.
 
@@ -174,6 +178,9 @@ class RoundEngine:
     single host sync instead of one per round. The key-split schedule inside
     the scan body is identical to the eager ``simulate()`` loop, making
     scanned runs bit-for-bit reproductions of eager runs.
+
+    :meth:`autotune` picks the chunk length empirically —
+    ``simulate(..., scan_chunk="auto")`` exposes it.
     """
 
     def __init__(self, alg):
@@ -183,6 +190,42 @@ class RoundEngine:
                 "scan_rounds; run it through the eager simulate() path")
         self.alg = alg
         self._chunk_fns: Dict[int, Any] = {}
+        self.tuned_chunk: int | None = None
+
+    def autotune(self, params0, data, key, cap: int = 0,
+                 candidates=AUTOTUNE_CANDIDATES) -> int:
+        """Pick a chunk length from measured us_per_round of 2-chunk probes.
+
+        Each candidate length runs TWO chunks on a disposable
+        ``alg.init(params0)`` state: the first pays the compile + warmup,
+        the second is timed. The probe state is donated through the chain,
+        so peak memory stays one state generation; the probe ``key`` should
+        be derived OUT of the caller's key schedule (``simulate`` folds one
+        off) so tuning never perturbs the run's round keys. ``cap > 0``
+        bounds the candidates (e.g. to ``eval_every`` so chunks don't
+        straddle eval points). The winner is cached on the engine — compiled
+        chunk programs for the winning length are reused by the real run.
+        """
+        if self.tuned_chunk is not None:
+            return self.tuned_chunk
+        import time
+        cands = sorted({min(c, cap) if cap else c
+                        for c in candidates if c >= 2})
+        if not cands:
+            cands = [2]
+        best, best_us = cands[0], float("inf")
+        state = self.alg.init(params0)
+        for c in cands:
+            key, state, ms = self.run_chunk(state, data, key, c)  # warmup
+            jax.block_until_ready(ms)
+            t0 = time.perf_counter()
+            key, state, ms = self.run_chunk(state, data, key, c)
+            jax.block_until_ready(ms)
+            us = (time.perf_counter() - t0) / c * 1e6
+            if us < best_us:
+                best, best_us = c, us
+        self.tuned_chunk = best
+        return best
 
     def run_chunk(self, state, data, key, length: int):
         """Advance ``length`` rounds on device.

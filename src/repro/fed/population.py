@@ -1,0 +1,373 @@
+"""Million-client population engine: the sharded client-state store and
+first-class ``Participation`` specs.
+
+The paper's experiments stop at 300 LEAF nodes, but the whole point of a
+compressed, partially-asynchronous FedAvg is that it survives *scale* — the
+ROADMAP north-star asks the simulation itself to reach N=10^5..10^6 clients.
+Two abstractions make N a **spec instead of a hot-path cost**:
+
+  * **:class:`Population`** — ONE store for all per-client state: speeds λ,
+    speed-class/phase-group labels, last-interaction times, client models,
+    error-feedback/codec residuals, control variates. Every row is a stacked
+    device array whose leading axis is the client axis, so the store is a
+    plain pytree that rides ``jax.lax.scan`` carries, can be DONATED by the
+    scanned engine, and shards over a client-parallel mesh axis
+    (:func:`client_mesh` / :func:`shard_population`). A round touches the
+    population only through a sparse :func:`gather_rows` of the s
+    participating clients' rows and a :func:`scatter_rows` of the updated
+    rows — both O(s·row), independent of N, and both INSIDE the traced round
+    body so scanned rounds stay device-resident with one host sync per
+    chunk.
+
+  * **:class:`Participation`** — who enters a round is a spec on the clock,
+    not an implementation detail of each algorithm:
+
+      ``uniform``                      s clients uniformly without
+                                       replacement (the paper's sampling).
+      ``gamma_straggler[:strength=a]`` availability ∝ λ^a — fast clients
+                                       answer polls more often (async-FL
+                                       speedup regime of arXiv:2402.11198).
+      ``cyclic:period=P,phase_groups=G``  the population is split into G
+                                       contiguous phase groups; group
+                                       ``(t // (P/G)) mod G`` is available
+                                       during round t, and the s
+                                       participants are drawn uniformly
+                                       within it (periodic/cyclic
+                                       participation à la Amplified
+                                       SCAFFOLD, NeurIPS 2024).
+
+    A spec is a pure function of ``(key, round t, n, s[, λ])`` — no state —
+    so the schedule is deterministic across ``lax.scan`` chunk boundaries
+    and identical between the eager and scanned engines.
+
+**Per-client RNG is derived lazily** from ``(base_key, client_id)``
+(:func:`client_keys`), generalizing the clock's lazy Poisson H-draws: a
+client's randomness is a function of its IDENTITY, not of its position in
+this round's sample or of where its row is sharded, so draws are stable
+under resharding and under participation reordering. Non-uniform specs use
+the per-client derivation for their H-draws (:meth:`Participation.h_steps`);
+the ``uniform`` spec keeps the legacy batched draw bit-for-bit.
+
+**Sampling cost.** ``jax.random.choice(..., replace=False)`` materializes an
+O(N log N) permutation — 130ms/round at N=10^5 on CPU, which would make N a
+hot-path cost again. Above :data:`DENSE_SAMPLE_MAX` clients the uniform
+sampler switches to Floyd's algorithm (:func:`floyd_sample`): s tiny draws,
+O(s^2) total, exact uniform without replacement. The switch is a pure
+function of the static n, so both execution paths of any comparison see the
+same draws; at small n the legacy ``jax.random.choice`` draw is preserved
+bit-for-bit (the golden anchors run there).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, ClassVar, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.fed.clock import lazy_h_steps, speeds_for
+
+# above this population size the uniform sampler switches from the legacy
+# O(n log n) permutation draw to Floyd's O(s^2) subset sampler
+DENSE_SAMPLE_MAX = 4096
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class Population(NamedTuple):
+    """All per-client state as stacked rows; leaves lead with the (n, ...)
+    client axis. A plain pytree: scan-able, donat-able, shard-able."""
+    rows: Dict[str, Any]
+
+    @property
+    def n(self) -> int:
+        return jax.tree_util.tree_leaves(self.rows)[0].shape[0]
+
+    def row(self, name: str):
+        return self.rows[name]
+
+
+def build_population(fed: FedConfig, n: int = None, *,
+                     uniform_speeds: bool = False, lam=None,
+                     **extra_rows) -> Population:
+    """The base store: speeds ``lam`` (the clock's fast/slow split unless an
+    explicit vector is given) and ``group`` speed-class labels (1 = slow),
+    plus any algorithm-specific ``extra_rows`` (models, residuals, control
+    variates, ...)."""
+    n = fed.n_clients if n is None else n
+    if lam is None:
+        lam = speeds_for(fed, n, uniform=uniform_speeds)
+    lam = jnp.asarray(lam, jnp.float32)
+    group = (lam == jnp.float32(fed.lam_slow)).astype(jnp.int32)
+    return Population(rows=dict(lam=lam, group=group, **extra_rows))
+
+
+def with_rows(pop: Population, **rows) -> Population:
+    """A copy of the store with the named rows added/replaced."""
+    return Population(rows={**pop.rows, **rows})
+
+
+def gather_rows(pop: Population, idx) -> Dict[str, Any]:
+    """Sparse O(s·row) gather of the participating clients' rows."""
+    return jax.tree_util.tree_map(lambda a: a[idx], pop.rows)
+
+
+def scatter_rows(pop: Population, idx, updates: Dict[str, Any]) -> Population:
+    """Scatter updated rows back (O(s·row)); untouched rows are carried
+    through by reference so XLA keeps the store in place under donation."""
+    new = dict(pop.rows)
+    for name, val in updates.items():
+        new[name] = jax.tree_util.tree_map(
+            lambda a, v: a.at[idx].set(v), pop.rows[name], val)
+    return Population(rows=new)
+
+
+# ---------------------------------------------------------------------------
+# client-parallel mesh axis
+# ---------------------------------------------------------------------------
+
+def client_mesh(devices=None):
+    """A 1-D mesh over ``devices`` (default: all) with the client-parallel
+    axis ``"clients"`` — orthogonal to the model-parallel ``data``/``model``
+    axes of the SPMD path."""
+    from jax.sharding import Mesh
+    devices = jax.devices() if devices is None else devices
+    return Mesh(np.asarray(devices), ("clients",))
+
+
+def shard_population(pop: Population, mesh) -> Population:
+    """Place every row with its leading client axis sharded over the mesh's
+    ``"clients"`` axis (rows whose leading dim does not divide the axis stay
+    replicated). The store's VALUES are unchanged — only placement moves."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    def place(a):
+        spec = (P("clients") if a.ndim >= 1 and a.shape[0] % n_dev == 0
+                else P())
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    return Population(rows=jax.tree_util.tree_map(place, pop.rows))
+
+
+# ---------------------------------------------------------------------------
+# lazy per-client RNG
+# ---------------------------------------------------------------------------
+
+def client_keys(base_key, ids):
+    """Key per client, derived lazily from ``(base_key, client_id)``.
+
+    A client's stream is a function of its IDENTITY: the same ids yield the
+    same keys regardless of sample order, round composition, or how the
+    population rows are sharded — the generalization of the clock's lazy
+    Poisson H-draw contract to every per-client random quantity."""
+    return jax.vmap(lambda i: jax.random.fold_in(base_key, i))(
+        jnp.asarray(ids, jnp.int32))
+
+
+def lazy_h_steps_per_client(base_key, ids, lam_i, elapsed, local_steps: int):
+    """Per-client-keyed variant of :func:`repro.fed.clock.lazy_h_steps`:
+    H_i = min(K, Poisson(λ_i · elapsed_i)) drawn from ``fold_in(base, i)``,
+    so a client's progress draw is stable under resharding and participation
+    reordering (used by the non-uniform participation specs)."""
+    ks = client_keys(base_key, ids)
+    draws = jax.vmap(lambda k, rate: jax.random.poisson(k, rate))(
+        ks, lam_i * elapsed)
+    return jnp.minimum(draws, local_steps).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# samplers
+# ---------------------------------------------------------------------------
+
+def floyd_sample(key, n: int, s: int) -> jnp.ndarray:
+    """Exact uniform s-subset of [0, n) without replacement in O(s^2) —
+    Floyd's algorithm, unrolled over the (static, small) s. No O(n)
+    permutation is ever materialized, so the draw cost is independent of
+    the population size."""
+    keys = jax.random.split(key, s)
+    chosen = jnp.full((s,), -1, jnp.int32)
+    for i in range(s):
+        j = n - s + i
+        t = jax.random.randint(keys[i], (), 0, j + 1, dtype=jnp.int32)
+        dup = jnp.any(chosen == t)
+        chosen = chosen.at[i].set(jnp.where(dup, jnp.int32(j), t))
+    return chosen
+
+
+def uniform_sample(key, n: int, s: int) -> jnp.ndarray:
+    """Uniform without replacement, scale-aware: the legacy permutation
+    draw (bit-for-bit ``clock.sample_clients``) up to
+    :data:`DENSE_SAMPLE_MAX` clients, Floyd's O(s^2) sampler above. The
+    switch depends only on the static n, so every execution path of a run
+    at a given n sees identical draws."""
+    if n <= DENSE_SAMPLE_MAX:
+        return jax.random.choice(key, n, (s,), replace=False)
+    return floyd_sample(key, n, s)
+
+
+# ---------------------------------------------------------------------------
+# participation specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Participation:
+    """Who participates in round t — a pure function of
+    ``(key, t, n, s[, λ])``, deterministic across scan chunk boundaries.
+
+    ``per_client_rng`` selects the H-draw derivation: False keeps the
+    legacy batched draw (golden-pinned), True derives per-client keys via
+    :func:`client_keys` (stable under resharding/reordering)."""
+
+    per_client_rng: ClassVar[bool] = False
+    name: ClassVar[str] = "base"
+
+    def sample(self, key, t, n: int, s: int, lam=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def h_steps(self, key, ids, lam_i, elapsed, local_steps: int):
+        """Lazy local-progress draws for the sampled clients."""
+        if self.per_client_rng:
+            return lazy_h_steps_per_client(key, ids, lam_i, elapsed,
+                                           local_steps)
+        return lazy_h_steps(key, lam_i, elapsed, local_steps)
+
+
+@dataclass(frozen=True)
+class UniformParticipation(Participation):
+    """The paper's sampling: s clients uniformly without replacement."""
+
+    name: ClassVar[str] = "uniform"
+
+    def sample(self, key, t, n: int, s: int, lam=None):
+        return uniform_sample(key, n, s)
+
+
+@dataclass(frozen=True)
+class GammaStragglerParticipation(Participation):
+    """Availability follows speed: P(client i enters) ∝ λ_i^strength —
+    fast clients answer polls more often, slow clients drift longer between
+    contacts (the heterogeneous-entry regime of arXiv:2402.11198). Exact
+    weighted sampling without replacement via the Gumbel-top-k trick."""
+
+    strength: float = 1.0
+    per_client_rng: ClassVar[bool] = True
+    name: ClassVar[str] = "gamma_straggler"
+
+    def sample(self, key, t, n: int, s: int, lam=None):
+        if lam is None:
+            raise ValueError("gamma_straggler participation needs the "
+                             "population's lam row")
+        scores = (self.strength * jnp.log(lam)
+                  + jax.random.gumbel(key, (n,)))
+        return jax.lax.top_k(scores, s)[1].astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class CyclicParticipation(Participation):
+    """Periodic availability à la Amplified SCAFFOLD (NeurIPS 2024): the
+    population splits into ``phase_groups`` contiguous blocks; block
+    ``(t // (period/phase_groups)) mod phase_groups`` is available during
+    round t and the s participants are drawn uniformly within it. Every
+    client's chance of participation over a full period window is equal —
+    cyclic availability, not bias."""
+
+    period: int = 8
+    phase_groups: int = 4
+    per_client_rng: ClassVar[bool] = True
+    name: ClassVar[str] = "cyclic"
+
+    def __post_init__(self):
+        if self.phase_groups < 1 or self.period < self.phase_groups:
+            raise ValueError(
+                f"cyclic participation needs period >= phase_groups >= 1; "
+                f"got period={self.period}, phase_groups={self.phase_groups}")
+        if self.period % self.phase_groups:
+            raise ValueError(
+                f"cyclic period {self.period} must be a multiple of "
+                f"phase_groups {self.phase_groups} (each group is available "
+                f"for period/phase_groups consecutive rounds)")
+
+    def rounds_per_phase(self) -> int:
+        return self.period // self.phase_groups
+
+    def group_at(self, t):
+        """The phase group available during round t (traced-friendly)."""
+        return (t // self.rounds_per_phase()) % self.phase_groups
+
+    def sample(self, key, t, n: int, s: int, lam=None):
+        G = self.phase_groups
+        if n % G:
+            raise ValueError(f"cyclic participation: n_clients {n} must be "
+                             f"divisible by phase_groups {G}")
+        m = n // G
+        if s > m:
+            raise ValueError(f"cyclic participation: s={s} exceeds the "
+                             f"phase-group size {m} (= n/G = {n}/{G})")
+        g = jnp.asarray(self.group_at(t), jnp.int32)
+        return (g * m + uniform_sample(key, m, s)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# spec registry + parser (the same `name:key=val,...` grammar as the codec
+# and transport registries)
+# ---------------------------------------------------------------------------
+
+_PARTICIPATIONS = {
+    "uniform": UniformParticipation,
+    "gamma_straggler": GammaStragglerParticipation,
+    "cyclic": CyclicParticipation,
+}
+
+
+def registered_participations() -> Tuple[str, ...]:
+    return tuple(_PARTICIPATIONS)
+
+
+def register_participation(name: str, builder) -> None:
+    """Register a custom availability pattern; ``builder(**params)`` must
+    return a :class:`Participation`."""
+    if name in _PARTICIPATIONS:
+        raise ValueError(f"participation {name!r} already registered")
+    _PARTICIPATIONS[name] = builder
+
+
+def _parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
+    name, _, tail = spec.partition(":")
+    params: Dict[str, Any] = {}
+    if tail:
+        for item in tail.split(","):
+            k, eq, v = item.partition("=")
+            if not eq or not k:
+                raise ValueError(f"malformed participation spec {spec!r} "
+                                 f"(want name:key=val,key=val)")
+            try:
+                params[k.strip()] = int(v)
+            except ValueError:
+                params[k.strip()] = float(v)
+    return name.strip(), params
+
+
+def resolve_participation(spec, fed: FedConfig = None) -> Participation:
+    """Build a :class:`Participation` from a spec string (``"uniform"``,
+    ``"gamma_straggler:strength=2"``, ``"cyclic:period=8,phase_groups=4"``),
+    pass an instance through, or — given ``None``/``""`` — fall back to
+    ``fed.participation`` and finally to ``uniform``."""
+    if isinstance(spec, Participation):
+        return spec
+    if spec is None or spec == "":
+        spec = getattr(fed, "participation", "") or "uniform"
+        if isinstance(spec, Participation):
+            return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"participation spec must be a name string or "
+                        f"Participation instance; got {type(spec).__name__}")
+    name, params = _parse_spec(spec)
+    if name not in _PARTICIPATIONS:
+        raise ValueError(f"unknown participation {name!r}; choose from "
+                         f"{sorted(_PARTICIPATIONS)}")
+    return _PARTICIPATIONS[name](**params)

@@ -39,6 +39,17 @@ Every algorithm that communicates additionally accepts ``uplink=`` /
 ``codec_down`` and then to the algorithm's historical scheme; the metrics'
 ``bits_up`` / ``bits_down`` are computed by the selected codecs.
 
+The round-sampling algorithms (``quafl``, ``fedavg``, ``quafl_scaffold``,
+``adaptive_quafl``, ``compressed_fedavg``) also accept ``participation=``
+— a :mod:`repro.fed.population` spec (``"uniform"``,
+``"gamma_straggler:strength=2"``, ``"cyclic:period=8,phase_groups=4"``, or
+a ``Participation`` instance) selecting WHO answers each round's poll,
+defaulting to ``FedConfig.participation`` and then uniform — and
+``client_mesh=`` to shard the per-client population store over a
+client-parallel mesh axis. ``fedbuff``/``fedbuff_device`` are event-driven
+(every client completion arrives; there is no per-round draw to re-spec),
+and ``sequential``/``spmd`` have no sampled cohort.
+
 The registry is extensible: third-party variants join via
 :func:`register_algorithm` and immediately work with ``simulate()`` /
 ``compare()`` and every registry-driven entry point.
@@ -88,8 +99,9 @@ def _build_adaptive(fed, loss_fn, template, batch_fn, **kw):
     from repro.core.extensions import AdaptiveQuaflAlgorithm
     from repro.core.quafl import QuAFL
     quafl_kw = {k: kw.pop(k) for k in ("avg_mode", "uniform_speeds",
-                                       "exchange_impl", "uplink",
-                                       "downlink") if k in kw}
+                                       "exchange_impl", "uplink", "downlink",
+                                       "participation", "client_mesh")
+                if k in kw}
 
     def make_alg(f):
         return QuAFL(fed=f, loss_fn=loss_fn, template=template,

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import numpy as np
@@ -63,6 +63,7 @@ class Trace:
     wall_time_s: float = 0.0
     eval_time_s: float = 0.0   # host time spent inside eval_fn
     engine: str = "eager"      # 'eager' | 'scanned'
+    scan_chunk: int = 0        # resolved chunk length (scanned engine only)
 
     @property
     def us_per_round(self) -> float:
@@ -128,7 +129,7 @@ def simulate(alg: FedAlgorithm, params0, data, key, *,
              eval_fn: Optional[Callable[[Any], Any]] = None,
              on_row: Optional[Callable[[Dict[str, Any]], None]] = None,
              name: str = "", max_rounds: int = 100_000,
-             scan_chunk: int = 0) -> Trace:
+             scan_chunk: Union[int, str] = 0) -> Trace:
     """Run ``alg`` from ``params0`` until the budget is exhausted.
 
     Budgets compose (first one hit wins): ``rounds`` server rounds,
@@ -149,6 +150,12 @@ def simulate(alg: FedAlgorithm, params0, data, key, *,
     ``lax.scan`` chunks of up to K rounds, one host sync per chunk (see the
     module docstring for the exact semantics). Prefer K dividing
     ``eval_every`` — each distinct chunk length compiles once.
+    ``scan_chunk="auto"`` autotunes K before the run
+    (:meth:`repro.fed.engine.RoundEngine.autotune`): each candidate length
+    runs a compile+warmup chunk and one timed chunk on a disposable probe
+    state, with a probe key folded OUT of the run's key schedule — the
+    tuned run's round keys (and trace) are identical to passing the winning
+    K explicitly. The resolved length lands in ``Trace.scan_chunk``.
 
     Eager path: device->host syncs happen only where a value is genuinely
     needed on the host — the stop condition of an active sim-time/bits
@@ -158,7 +165,10 @@ def simulate(alg: FedAlgorithm, params0, data, key, *,
     if rounds is None and until_sim_time is None and until_bits is None:
         raise ValueError("give at least one budget: rounds / until_sim_time "
                          "/ until_bits")
-    if scan_chunk and scan_chunk > 1 and supports_scan(alg):
+    if scan_chunk == "auto" and not supports_scan(alg):
+        scan_chunk = 0       # autotune has nothing to tune: eager fallback
+    if scan_chunk and (scan_chunk == "auto" or scan_chunk > 1) \
+            and supports_scan(alg):
         return _simulate_scanned(
             alg, params0, data, key, rounds=rounds,
             until_sim_time=until_sim_time, until_bits=until_bits,
@@ -219,6 +229,18 @@ def _simulate_scanned(alg, params0, data, key, *, rounds, until_sim_time,
             alg._round_engine = engine
         except AttributeError:   # slotted/frozen algorithm: uncached
             pass
+    limit = min(rounds, max_rounds) if rounds is not None else max_rounds
+    if scan_chunk == "auto":
+        # probe BEFORE the run state exists (one state generation live) and
+        # with a key folded off the run's stream — the tuned run's round
+        # keys are identical to passing the winning K explicitly
+        cap = limit
+        if eval_fn is not None and eval_every:
+            cap = min(cap, eval_every)
+        scan_chunk = engine.autotune(params0, data,
+                                     jax.random.fold_in(key, 0x5EED),
+                                     cap=cap)
+    trace.scan_chunk = int(scan_chunk)
     state = alg.init(params0)
     bits_up = np.float32(0.0)
     bits_down = np.float32(0.0)
@@ -226,7 +248,6 @@ def _simulate_scanned(alg, params0, data, key, *, rounds, until_sim_time,
     rec = _Recorder(trace, alg, eval_fn, on_row, t0)
     r = 0
     metrics = {}
-    limit = min(rounds, max_rounds) if rounds is not None else max_rounds
 
     done = False
     while r < limit and not done:

@@ -132,6 +132,17 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--n-slots", type=int, default=2)
+    ap.add_argument("--n-clients", type=int, default=0,
+                    help="population size n (0 = --n-slots). The per-round "
+                         "cohort stays --n-slots; the population engine "
+                         "(repro.fed.population) keeps the other n-s "
+                         "clients' state as store rows, so large n costs "
+                         "memory, not per-round time")
+    ap.add_argument("--participation", default="",
+                    help="participation spec: uniform|"
+                         "gamma_straggler[:strength=a]|"
+                         "cyclic:period=P,phase_groups=G "
+                         "(empty = FedConfig default, uniform)")
     ap.add_argument("--pool", type=int, default=0,
                     help="token-pool rows per client (0 = auto: at least "
                          "256; all algorithms sample minibatches from "
@@ -159,9 +170,11 @@ def main():
                     choices=["jnp", "pallas_interpret", "pallas"],
                     help="compression-pipeline kernel implementation, "
                          "threaded through both the registry and spmd paths")
-    ap.add_argument("--scan-chunk", type=int, default=0,
+    ap.add_argument("--scan-chunk", default="0",
                     help=">=2 runs device_round-capable algorithms in "
-                         "K-round scanned chunks (one host sync per chunk)")
+                         "K-round scanned chunks (one host sync per "
+                         "chunk); 'auto' picks K from a timed probe "
+                         "(RoundEngine.autotune)")
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
@@ -170,11 +183,19 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    fed = FedConfig(n_clients=args.n_slots, s=args.n_slots,
+    args.scan_chunk = (args.scan_chunk if args.scan_chunk == "auto"
+                       else int(args.scan_chunk))
+    n_clients = args.n_clients or args.n_slots
+    if n_clients < args.n_slots:
+        raise SystemExit(f"--n-clients {n_clients} < --n-slots "
+                         f"{args.n_slots}: cannot sample more clients per "
+                         f"round than the population holds")
+    fed = FedConfig(n_clients=n_clients, s=args.n_slots,
                     local_steps=args.local_steps, lr=args.lr,
                     bits=args.bits, quantizer=args.quantizer,
                     codec_up=args.codec_up, codec_down=args.codec_down,
                     transport=args.transport,
+                    participation=args.participation,
                     kernel_backend=args.kernel_backend)
     key = jax.random.PRNGKey(args.seed)
     run_registry(args, cfg, fed, key)

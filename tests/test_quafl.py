@@ -27,7 +27,7 @@ def test_mean_preservation_no_steps_no_quant():
     fed = FedConfig(n_clients=8, s=3, local_steps=2, lr=0.0, quantizer="none")
     alg, st, part, _, key = _setup(fed)
     # diverge the clients artificially
-    st = st._replace(clients=st.clients + jax.random.normal(
+    st = st.with_clients(st.clients + jax.random.normal(
         key, st.clients.shape))
     mu0 = (st.server + jnp.sum(st.clients, 0)) / (fed.n_clients + 1)
     st2, _ = alg.round(st, part, key)
@@ -39,7 +39,7 @@ def test_clients_contract_towards_server():
     """The (s+1)-averaging strictly decreases the potential Φ when lr=0."""
     fed = FedConfig(n_clients=6, s=6, local_steps=1, lr=0.0, quantizer="none")
     alg, st, part, _, key = _setup(fed)
-    st = st._replace(clients=st.clients + jax.random.normal(
+    st = st.with_clients(st.clients + jax.random.normal(
         key, st.clients.shape))
 
     def phi(s):
