@@ -1,0 +1,46 @@
+"""Static-analysis gate as a bench route: runs ``repro.analysis.lint``
+over the full algorithm × codec matrix and emits one record per cell
+(analyzer wall time + violation count), so the gate's cost and cleanliness
+ride the same baseline machinery as the perf benches.
+
+``python -m benchmarks.run --only analysis`` writes the full
+machine-readable report to repo-root ``ANALYSIS.json`` (the harness then
+merges the per-cell records into the same file, preserving the report's
+top-level keys).
+"""
+import json
+
+from benchmarks.common import emit
+
+
+def main(quick_rounds: int = 0) -> None:
+    # the harness passes a round budget in --quick mode; the analysis gate
+    # maps that to skipping the two expensive passes (donation compiles +
+    # sentinel simulate() runs)
+    from repro.analysis.lint import default_json_path, run_lint
+    quick = bool(quick_rounds)
+    report = run_lint(quick=quick, verbose=False)
+    for cell, rep in report["matrix"].items():
+        n = len(rep.get("violations", []))
+        eqns = rep.get("ops_round", {}).get("eqns_total", 0)
+        emit(f"analysis_{cell}", rep["seconds"] * 1e6,
+             f"viols={n};round_eqns={eqns}")
+    for alg, rep in report["sentinel"].items():
+        n = len(rep.get("violations", []))
+        compiles = sum(rep.get("compiles", {}).values())
+        emit(f"analysis_sentinel_{alg}", rep["seconds"] * 1e6,
+             f"viols={n};compiles={compiles}")
+    emit("analysis_ast", 0.0,
+         f"viols={len(report['ast']['violations'])}")
+    if not quick:
+        # a quick report (no donation/sentinel passes) must not clobber
+        # the committed full baseline at repo root
+        path = default_json_path()
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {path} ({report['violations_total']} violations, "
+              f"{report['seconds']}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,8 @@ import os
 import sys
 import time
 
-from benchmarks import (bench_algorithms, bench_averaging, bench_bits,
-                        bench_bits_accounting, bench_exchange,
+from benchmarks import (bench_algorithms, bench_analysis, bench_averaging,
+                        bench_bits, bench_bits_accounting, bench_exchange,
                         bench_extensions, bench_fedbuff, bench_kernels,
                         bench_local_steps, bench_peers, bench_population,
                         bench_quantizer, bench_roofline, bench_swt,
@@ -40,13 +40,15 @@ BENCHES = [
     ("algorithms", bench_algorithms.main),
     ("population", bench_population.main),
     ("roofline", bench_roofline.main),
+    ("analysis", bench_analysis.main),
 ]
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_ROOT, "BENCH_exchange.json")
 # benches whose records get their own baseline file (name -> path)
 JSON_TARGETS = {"algorithms": os.path.join(_ROOT, "BENCH_algorithms.json"),
-                "population": os.path.join(_ROOT, "BENCH_algorithms.json")}
+                "population": os.path.join(_ROOT, "BENCH_algorithms.json"),
+                "analysis": os.path.join(_ROOT, "ANALYSIS.json")}
 # quick-scale numbers are not comparable with the committed baselines, so
 # they land under the gitignored bench_out/ instead of the repo root
 QUICK_DIR = os.path.join(_ROOT, "bench_out")
@@ -62,19 +64,27 @@ def _arg_value(flag: str):
 
 def _write_merged(path: str, records, quick: bool):
     """Merge records by name into ``path`` — a partial run (--only)
-    refreshes its own rows without clobbering the committed baseline."""
-    merged = {}
+    refreshes its own rows without clobbering the committed baseline.
+    Top-level keys beyond schema/quick/benches are preserved, so routing
+    records into a richer report (ANALYSIS.json carries the full analyzer
+    payload next to its bench rows) doesn't flatten it."""
+    base = {}
     if os.path.exists(path):
         try:
             with open(path) as f:
-                merged = {r["name"]: r for r in json.load(f).get("benches",
-                                                                 [])}
-        except (ValueError, KeyError):
-            merged = {}
+                base = json.load(f)
+        except ValueError:
+            base = {}
+    try:
+        merged = {r["name"]: r for r in base.get("benches", [])}
+    except (KeyError, TypeError):
+        merged = {}
     merged.update({r["name"]: r for r in records})
+    base.setdefault("schema", "bench.v1")
+    base["quick"] = quick
+    base["benches"] = list(merged.values())
     with open(path, "w") as f:
-        json.dump({"schema": "bench.v1", "quick": quick,
-                   "benches": list(merged.values())}, f, indent=2)
+        json.dump(base, f, indent=2)
     print(f"# wrote {len(records)} records ({len(merged)} total) to {path}")
 
 

@@ -1,0 +1,23 @@
+"""Static analysis for traced federated rounds — jaxpr + AST invariants.
+
+Two halves (see ``README.md`` § Static analysis):
+
+* jaxpr analyzers (:mod:`repro.analysis.jaxpr`, ``opbudget``, ``donation``,
+  ``sentinel``) — walk the closed jaxpr / lowered HLO of every registry
+  algorithm's round, via ``RoundEngine.traced_round()`` / ``traced_chunk()``.
+* AST repo rules (:mod:`repro.analysis.astlint`) — source-level checks over
+  ``src/repro/``.
+
+``python -m repro.analysis.lint`` runs everything over the full
+algorithm × codec matrix and writes ``ANALYSIS.json``. Keep this package
+__init__ import-light: ``compression.pipeline`` imports ``opbudget`` at
+instance-construction time, so pulling registries in here would be a cycle.
+"""
+from repro.analysis.jaxpr import (Violation, analyze_jaxpr,  # noqa: F401
+                                  check_host_callbacks,
+                                  check_key_discipline, check_wide_dtypes,
+                                  iter_eqns, op_counts, op_report)
+from repro.analysis.opbudget import (OpBudget,  # noqa: F401
+                                     check_rotation_budget,
+                                     rotation_budget)
+from repro.analysis.sentinel import RecompileSentinel  # noqa: F401

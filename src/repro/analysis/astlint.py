@@ -1,0 +1,303 @@
+"""AST repo-rule lint over ``src/repro/`` — the python half of the gate.
+
+The jaxpr analyzers see what a trace *produced*; these rules catch what the
+source says before a trace ever runs:
+
+  ``R001 host-call-in-traced``  no ``np.random`` / ``time.time()`` /
+      ``datetime.now()`` inside traced bodies in ``core/`` / ``fed/`` — a
+      host RNG or clock read inside a jitted round body is baked in as a
+      trace-time constant (silently frozen) rather than per-call behavior.
+  ``R002 unresolved-spec``  codec / participation spec-string literals
+      (``uplink=...``, ``codec_up=...``, ``participation=...``) must
+      resolve in their registries — a typo'd spec name should fail lint,
+      not the first experiment that exercises that config path.
+  ``R003 metrics-schema``  an algorithm's ``metrics = {...}`` dict literal
+      must cover :data:`repro.fed.api.METRIC_KEYS` — a missing schema key
+      silently becomes its default in ``normalize_metrics`` and poisons
+      equal-bits / equal-time comparisons.
+  ``R004 unused-import``  no unused imports outside ``__init__.py``
+      re-export surfaces (``# noqa`` opts a line out) — the ruff ``F401``
+      baseline, checkable without ruff installed.
+
+A **traced body** for R001 is a function decorated with ``jit``, named
+``device_round``, passed by name to ``jax.jit`` / ``jax.lax.scan`` /
+``while_loop`` / ``cond`` / ``fori_loop``, or any function nested inside
+one of those.
+
+:func:`lint_path` walks a tree; :func:`lint_source` checks one buffer (the
+mutation fixtures in the tests feed seeded-violation sources through it).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence, Set
+
+from repro.analysis.jaxpr import Violation
+
+# R001 ----------------------------------------------------------------------
+
+_TRACER_CALLS = {"jit", "scan", "while_loop", "cond", "fori_loop",
+                 "checkpoint", "remat", "vmap", "pmap", "shard_map"}
+_HOST_CALLS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("datetime", "now"), ("datetime", "utcnow"),
+}
+_HOST_RNG_ROOTS = {("np", "random"), ("numpy", "random")}
+
+
+def _attr_chain(node) -> List[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        return []
+    return parts[::-1]
+
+
+def _decorated_jit(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        for node in ast.walk(dec):
+            if isinstance(node, ast.Attribute) and node.attr == "jit":
+                return True
+            if isinstance(node, ast.Name) and node.id == "jit":
+                return True
+    return False
+
+
+def _names_passed_to_tracers(tree: ast.AST) -> Set[str]:
+    """Function names that appear as arguments to jit/scan/cond/... calls
+    anywhere in the module (that's how inner scan bodies get traced)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not chain or chain[-1] not in _TRACER_CALLS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                out.add(arg.id)
+    return out
+
+
+def _check_traced_bodies(tree: ast.AST, path: str) -> List[Violation]:
+    traced_names = _names_passed_to_tracers(tree)
+    out: List[Violation] = []
+
+    def visit(node: ast.AST, in_traced: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            traced = (in_traced or _decorated_jit(node)
+                      or node.name == "device_round"
+                      or node.name in traced_names)
+            for child in ast.iter_child_nodes(node):
+                visit(child, traced)
+            return
+        if in_traced:
+            chain = _attr_chain(node) if isinstance(node,
+                                                    ast.Attribute) else []
+            if len(chain) >= 2 and tuple(chain[:2]) in _HOST_RNG_ROOTS:
+                out.append(Violation(
+                    "R001:host-call-in-traced",
+                    f"{path}:{node.lineno}",
+                    f"host RNG `{'.'.join(chain)}` inside a traced body — "
+                    f"use jax.random with the round key"))
+            if isinstance(node, ast.Call):
+                cchain = _attr_chain(node.func)
+                if len(cchain) >= 2 and tuple(cchain[-2:]) in _HOST_CALLS:
+                    out.append(Violation(
+                        "R001:host-call-in-traced",
+                        f"{path}:{node.lineno}",
+                        f"host clock `{'.'.join(cchain)}()` inside a traced "
+                        f"body — value freezes at trace time"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, in_traced)
+
+    visit(tree, False)
+    return out
+
+
+# R002 ----------------------------------------------------------------------
+
+_CODEC_KWARGS = {"uplink", "downlink", "codec_up", "codec_down"}
+_PART_KWARGS = {"participation"}
+
+
+def _spec_name(spec: str) -> str:
+    return spec.split(":", 1)[0].strip()
+
+
+def _registry_names():
+    from repro.compression.codecs import registered_codecs
+    from repro.fed.population import registered_participations
+    return set(registered_codecs()), set(registered_participations())
+
+
+def _spec_strings(value: ast.AST):
+    """Spec string literals in a kwarg value: a Constant str, or the values
+    of a per-client-group dict literal."""
+    if isinstance(value, ast.Constant) and isinstance(value.value, str):
+        yield value.value, value.lineno
+    elif isinstance(value, ast.Dict):
+        for v in value.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                yield v.value, v.lineno
+
+
+def _check_spec_strings(tree: ast.AST, path: str) -> List[Violation]:
+    codecs, parts = _registry_names()
+    out: List[Violation] = []
+
+    def judge(kwarg: str, spec: str, lineno: int) -> None:
+        if not spec:
+            return   # "" = use the algorithm's historical default
+        names = parts if kwarg in _PART_KWARGS else codecs
+        if _spec_name(spec) not in names:
+            kind = ("participation" if kwarg in _PART_KWARGS else "codec")
+            out.append(Violation(
+                "R002:unresolved-spec", f"{path}:{lineno}",
+                f"{kind} spec {spec!r} (kwarg {kwarg}=) does not resolve: "
+                f"{_spec_name(spec)!r} not in {sorted(names)}"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in _CODEC_KWARGS | _PART_KWARGS:
+                    for spec, ln in _spec_strings(kw.value):
+                        judge(kw.arg, spec, ln)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            tgt = node.target
+            if (isinstance(tgt, ast.Name)
+                    and tgt.id in _CODEC_KWARGS | _PART_KWARGS):
+                for spec, ln in _spec_strings(node.value):
+                    judge(tgt.id, spec, ln)
+    return out
+
+
+# R003 ----------------------------------------------------------------------
+
+def _check_metrics_schema(tree: ast.AST, path: str) -> List[Violation]:
+    from repro.fed.api import METRIC_KEYS
+    out: List[Violation] = []
+    # only the dict an algorithm's round RETURNS is schema-bound — partial
+    # dicts inside train steps / harness accumulators are not
+    round_fns = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name in ("round", "device_round")]
+    for fn in round_fns:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not any(isinstance(t, ast.Name) and t.id == "metrics"
+                       for t in node.targets):
+                continue
+            if not isinstance(node.value, ast.Dict):
+                continue
+            keys = node.value.keys
+            if any(k is None for k in keys):
+                continue   # {**base, ...} extends an already-complete dict
+            lit = {k.value for k in keys
+                   if isinstance(k, ast.Constant)
+                   and isinstance(k.value, str)}
+            missing = [k for k in METRIC_KEYS if k not in lit]
+            if missing:
+                out.append(Violation(
+                    "R003:metrics-schema", f"{path}:{node.lineno}",
+                    f"metrics dict literal missing schema keys {missing} "
+                    f"(METRIC_KEYS) — normalize_metrics will silently "
+                    f"default them"))
+    return out
+
+
+# R004 ----------------------------------------------------------------------
+
+def _noqa_lines(source: str) -> Set[int]:
+    return {i + 1 for i, line in enumerate(source.splitlines())
+            if "# noqa" in line}
+
+
+def _check_unused_imports(tree: ast.AST, source: str, path: str,
+                          ) -> List[Violation]:
+    noqa = _noqa_lines(source)
+    imported = []   # (local_name, shown_name, lineno)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = (a.asname or a.name).split(".")[0]
+                imported.append((local, a.name, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imported.append((a.asname or a.name, a.name, node.lineno))
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain:
+                used.add(chain[0])
+        elif (isinstance(node, ast.Constant)
+              and isinstance(node.value, str)):
+            used.add(node.value)   # covers __all__ = ["name"] re-exports
+    out = []
+    for local, shown, lineno in imported:
+        if local not in used and lineno not in noqa:
+            out.append(Violation(
+                "R004:unused-import", f"{path}:{lineno}",
+                f"`{shown}` imported but unused"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<buffer>",
+                rules: Optional[Sequence[str]] = None) -> List[Violation]:
+    """Run the repo rules on one source buffer. ``rules`` filters by rule
+    id prefix (e.g. ``["R001"]``); default = the rules that apply to the
+    file's location (R001 only under ``core/`` / ``fed/``; R004 not on
+    ``__init__.py``)."""
+    tree = ast.parse(source, filename=path)
+    norm = path.replace(os.sep, "/")
+    if rules is None:
+        rules = ["R002", "R003"]
+        if "/core/" in norm or "/fed/" in norm or norm.startswith(
+                ("core/", "fed/")):
+            rules.append("R001")
+        if not norm.endswith("__init__.py"):
+            rules.append("R004")
+    out: List[Violation] = []
+    if "R001" in rules:
+        out += _check_traced_bodies(tree, path)
+    if "R002" in rules:
+        out += _check_spec_strings(tree, path)
+    if "R003" in rules:
+        out += _check_metrics_schema(tree, path)
+    if "R004" in rules:
+        out += _check_unused_imports(tree, source, path)
+    return out
+
+
+def lint_path(root: str) -> List[Violation]:
+    """Lint every ``*.py`` under ``root`` with the default per-location
+    rule set; returns the combined violation list."""
+    out: List[Violation] = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                src = f.read()
+            try:
+                out += lint_source(src, path)
+            except SyntaxError as e:
+                out.append(Violation("R000:syntax", f"{path}:{e.lineno}",
+                                     str(e.msg)))
+    return out

@@ -1,0 +1,297 @@
+"""``python -m repro.analysis.lint`` — the repo's static-analysis gate.
+
+Runs both halves of :mod:`repro.analysis` and writes a machine-readable
+``ANALYSIS.json``:
+
+* **jaxpr matrix** — every registry algorithm × {lattice, lattice_packed,
+  topk_ef} uplink codec is built at a tiny config, its round and scanned
+  chunk traced through :meth:`RoundEngine.traced_round` / ``traced_chunk``,
+  and checked for host callbacks, wide dtypes, key discipline, the
+  rotation op-budget, and the donation contract of the compiled chunk;
+  a scanned ``simulate()`` run per algorithm feeds the recompile sentinel
+  (one compile per (algorithm, chunk length)).
+* **AST rules** — :func:`repro.analysis.astlint.lint_path` over
+  ``src/repro/``.
+
+Exit status is the number of violations (0 = clean). Flags::
+
+    --json PATH      where to write the report (default: repo-root
+                     ANALYSIS.json; "-" to skip writing)
+    --quick          skip the donation compiles and sentinel runs (the two
+                     expensive passes) — trace-level + AST checks only
+    --only SUBSTR    filter matrix cells by substring (e.g. --only quafl,
+                     --only lattice_packed)
+
+Registering a new analyzer = writing a function returning
+``List[Violation]`` and appending it in :func:`analyze_cell` (jaxpr-level)
+or :func:`repro.analysis.astlint.lint_source` (source-level); the README
+"Static analysis" section walks through it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+# algorithm × codec matrix ---------------------------------------------------
+
+MATRIX_CODECS = ("lattice", "lattice_packed", "topk_ef")
+
+# per-algorithm construction kwargs at the tiny lint config
+_ALG_KWARGS = {"fedbuff_device": {"buffer_size": 2}}
+
+# sparse EF uplink composes with every algorithm; the fused lattice
+# downlink families also run the downlink direction
+_DOWNLINK_OK = ("lattice", "lattice_packed")
+
+
+def _cells(only: Optional[str] = None):
+    from repro.fed.registry import registered_algorithms
+    algs = [a for a in registered_algorithms() if a != "fedbuff"]
+    for alg in algs:
+        for codec in MATRIX_CODECS:
+            cell = f"{alg}x{codec}"
+            if only and only not in cell:
+                continue
+            yield alg, codec
+
+
+def _build_cell(alg_name: str, codec: str):
+    """Build (alg, params0, data, key) at the tiny lint config."""
+    import jax
+    from repro.configs.base import FedConfig
+    from repro.fed.registry import make_algorithm
+    down = codec if codec.split(":")[0] in _DOWNLINK_OK else ""
+    kw = dict(_ALG_KWARGS.get(alg_name, {}))
+    if alg_name == "spmd":
+        from functools import partial
+        from repro.configs import get_reduced
+        from repro.data.synthetic import federated_token_task
+        from repro.models.model import init_lm, lm_loss
+        cfg = get_reduced("llama3.2-1b")
+        fed = FedConfig(n_clients=1, s=1, local_steps=1, lr=0.02,
+                        codec_up=codec, codec_down=down)
+        params0, _ = init_lm(cfg, jax.random.PRNGKey(0))
+        data, batch_fn = federated_token_task(0, 1, 32, 2, 16,
+                                              cfg.vocab_size)
+        alg = make_algorithm("spmd", fed, loss_fn=partial(lm_loss, cfg),
+                             template=params0, batch_fn=batch_fn, cfg=cfg,
+                             batch=2, seq=16, **kw)
+        return alg, data, params0, jax.random.PRNGKey(1)
+    from repro.data import make_federated_classification
+    from repro.data.synthetic import client_batch
+    from repro.models.mlp import init_mlp_classifier, mlp_loss
+    d, hidden, classes = 16, 16, 4
+    fed = FedConfig(n_clients=4, s=2, local_steps=1, lr=0.2, bits=8,
+                    codec_up=codec, codec_down=down)
+    part, _ = make_federated_classification(0, fed.n_clients, d=d,
+                                            n_classes=classes)
+    params0, _ = init_mlp_classifier(jax.random.PRNGKey(0), d, hidden,
+                                     classes)
+    alg = make_algorithm(alg_name, fed, loss_fn=mlp_loss, template=params0,
+                         batch_fn=lambda dd, k: client_batch(k, dd, d),
+                         **kw)
+    return alg, part, params0, jax.random.PRNGKey(1)
+
+
+def _traceable(alg):
+    """The (algorithm, init-state) pair the engine hooks trace. An
+    algorithm with custom ``scan_rounds`` host control (adaptive bit-width)
+    is analyzed through its current-bits inner algorithm."""
+    inner_of = getattr(alg, "_alg", None)
+    if callable(getattr(alg, "scan_rounds", None)) and callable(inner_of):
+        return inner_of(int(alg.fed.bits))
+    return alg
+
+
+def analyze_cell(alg_name: str, codec: str, *, donation: bool = True,
+                 chunk: int = 2) -> Dict:
+    """All jaxpr-level checks for one (algorithm, codec) cell."""
+    from repro.analysis.donation import audit_engine_chunk, donation_report
+    from repro.analysis.jaxpr import analyze_jaxpr
+    from repro.analysis.opbudget import (measure_round_counters,
+                                         rotation_budget)
+    from repro.fed.engine import RoundEngine
+    cell = f"{alg_name}x{codec}"
+    alg, data, params0, key = _build_cell(alg_name, codec)
+    target = _traceable(alg)
+    state = target.init(params0)
+    eng = RoundEngine(target)
+
+    viols = []
+    closed_r = eng.traced_round(state, data, key)
+    vs, ops = analyze_jaxpr(closed_r, f"{cell}/round")
+    viols += vs
+    closed_c = eng.traced_chunk(state, data, key, chunk)
+    vs, ops_chunk = analyze_jaxpr(closed_c, f"{cell}/chunk{chunk}")
+    viols += vs
+
+    report: Dict = {"ops_round": ops, "ops_chunk": ops_chunk}
+    # measure ONCE: a second trace of the same (self, avals) signature hits
+    # the pjit trace cache and the python body (where the counters live)
+    # never re-runs
+    measured = measure_round_counters(target, state, data, key)
+    if measured is not None:
+        report["rotation_counters"] = dict(measured.counters)
+        # the s+1/s+1 budget binds algorithms that route through the fused
+        # rotated exchange; an inherited-but-unused pipeline (scaffold runs
+        # stateless codec encodes instead) legitimately counts zero
+        if any(measured.counters.values()):
+            viols += measured.expect(f"{cell}/round",
+                                     rotation_budget(int(target.fed.s)))
+    if donation:
+        viols += audit_engine_chunk(eng, state, data, key, chunk,
+                                    f"{cell}/chunk{chunk}")
+        report["donation"] = donation_report(eng, state, data, key, chunk)
+    report["violations"] = [v.as_dict() for v in viols]
+    return report
+
+
+def sentinel_run(alg_name: str, *, rounds: int = 4, chunk: int = 2,
+                 codec: str = "lattice") -> Dict:
+    """Prove one-compile-per-(algorithm, chunk length) on a real scanned
+    ``simulate()`` run: record the chunk fingerprint before the run, run,
+    re-record, then interrogate every engine jit cache."""
+    import jax
+    from repro.analysis.sentinel import RecompileSentinel
+    from repro.fed.simulate import simulate
+    alg, data, params0, key = _build_cell(alg_name, codec)
+    target = _traceable(alg)
+    sentinel = RecompileSentinel()
+    tag = f"{alg_name}x{codec}"
+
+    from repro.fed.engine import RoundEngine
+    pre = RoundEngine(target).traced_chunk(target.init(params0), data,
+                                           jax.random.PRNGKey(1), chunk)
+    sentinel.record((tag, chunk), pre)
+    simulate(alg, params0, data, jax.random.PRNGKey(2), rounds=rounds,
+             eval_every=0, scan_chunk=chunk)
+    engines = [("", e) for e in [getattr(alg, "_round_engine", None)]
+               if e is not None]
+    # an adaptive wrapper compiles one program per visited bit-width: same
+    # one-compile contract, separate tag per width (the width the pre-run
+    # fingerprint pinned keeps the bare tag)
+    engines += [("" if b == int(alg.fed.bits) else f"@bits{b}", e)
+                for b, e in getattr(alg, "_engines", {}).items()]
+    compiles = {}
+    for subtag, eng in engines:
+        sentinel.check_engine((tag + subtag, chunk), eng)
+        if not callable(getattr(eng.alg, "device_round", None)):
+            # engine over a custom-scan_rounds wrapper (adaptive): its
+            # chunk cache is never populated — the inner engines above
+            # carry the compiled programs — and it has nothing to trace
+            continue
+        post = eng.traced_chunk(eng.alg.init(params0), data,
+                                jax.random.PRNGKey(1), chunk)
+        sentinel.record((tag + subtag, chunk), post)
+        for length, fn in eng._chunk_fns.items():
+            try:
+                compiles[f"chunk{length}{subtag}"] = fn._cache_size()
+            except AttributeError:
+                pass
+    return {"violations": [v.as_dict() for v in sentinel.report()],
+            "compiles": compiles}
+
+
+def run_lint(*, quick: bool = False, only: Optional[str] = None,
+             donation: Optional[bool] = None,
+             sentinel: Optional[bool] = None, verbose: bool = True) -> Dict:
+    """Full gate: AST rules + the jaxpr matrix (+ donation/sentinel unless
+    ``quick``). Returns the ANALYSIS.json payload."""
+    donation = (not quick) if donation is None else donation
+    sentinel = (not quick) if sentinel is None else sentinel
+    t0 = time.time()
+    src_root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))   # .../src/repro
+    from repro.analysis.astlint import lint_path
+    ast_viols = lint_path(src_root)
+    matrix: Dict[str, Dict] = {}
+    n_viols = len(ast_viols)
+    for alg_name, codec in _cells(only):
+        cell = f"{alg_name}x{codec}"
+        tc = time.time()
+        try:
+            rep = analyze_cell(alg_name, codec, donation=donation)
+        except Exception as e:   # an unanalyzable cell is itself a finding
+            rep = {"violations": [{
+                "rule": "analyzer-error", "where": cell,
+                "detail": f"{type(e).__name__}: {e}"}]}
+        rep["seconds"] = round(time.time() - tc, 2)
+        matrix[cell] = rep
+        n_viols += len(rep["violations"])
+        if verbose:
+            status = ("ok" if not rep["violations"]
+                      else f"{len(rep['violations'])} VIOLATIONS")
+            print(f"# {cell}: {status} ({rep['seconds']}s)", flush=True)
+    sentinels: Dict[str, Dict] = {}
+    if sentinel:
+        for alg_name, codec in _cells(only):
+            if codec != "lattice":   # one scanned run per algorithm
+                continue
+            ts = time.time()
+            try:
+                rep = sentinel_run(alg_name)
+            except Exception as e:
+                rep = {"violations": [{
+                    "rule": "analyzer-error", "where": alg_name,
+                    "detail": f"{type(e).__name__}: {e}"}]}
+            rep["seconds"] = round(time.time() - ts, 2)
+            sentinels[alg_name] = rep
+            n_viols += len(rep["violations"])
+            if verbose:
+                status = ("ok" if not rep["violations"]
+                          else f"{len(rep['violations'])} VIOLATIONS")
+                print(f"# sentinel {alg_name}: {status} "
+                      f"({rep['seconds']}s)", flush=True)
+    return {
+        "schema": "analysis.v1",
+        "quick": bool(quick),
+        "violations_total": n_viols,
+        "ast": {"root": src_root,
+                "violations": [v.as_dict() for v in ast_viols]},
+        "matrix": matrix,
+        "sentinel": sentinels,
+        "seconds": round(time.time() - t0, 2),
+    }
+
+
+def default_json_path() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))   # repo root
+    return os.path.join(root, "ANALYSIS.json")
+
+
+def _arg_value(argv: List[str], flag: str) -> Optional[str]:
+    if flag in argv:
+        i = argv.index(flag)
+        if i + 1 < len(argv):
+            return argv[i + 1]
+    return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    report = run_lint(quick="--quick" in argv,
+                      only=_arg_value(argv, "--only"))
+    path = _arg_value(argv, "--json") or default_json_path()
+    if path != "-":
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {path}")
+    n = report["violations_total"]
+    print(f"# repro.analysis.lint: {n} violation(s) in "
+          f"{report['seconds']}s")
+    if n:
+        for v in report["ast"]["violations"]:
+            print(f"AST  {v['rule']} {v['where']}: {v['detail']}")
+        for cell, rep in list(report["matrix"].items()) + \
+                list(report["sentinel"].items()):
+            for v in rep.get("violations", []):
+                print(f"JXPR {v['rule']} {v['where']}: {v['detail']}")
+    return min(n, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

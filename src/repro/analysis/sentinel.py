@@ -1,0 +1,93 @@
+"""Recompile sentinel: one compile per (algorithm, codec, chunk length).
+
+The scanned engine's whole performance story assumes each chunk program
+compiles ONCE and then replays — a retrace mid-run (weak-type drift in a
+state leaf, a shape that wobbles with the round index, a python scalar
+captured as a fresh constant) silently turns every chunk boundary into a
+multi-second compile. The sentinel pins this two ways:
+
+* **fingerprints** — :meth:`RecompileSentinel.record` hashes the chunk's
+  (jaxpr, input avals) under a ``(algorithm, codec, chunk length)`` tag;
+  a second ``record`` with a different fingerprint for the same tag is a
+  violation (the program the run would compile changed mid-run).
+* **jit-cache interrogation** — :meth:`RecompileSentinel.check_engine`
+  reads ``fn._cache_size()`` of every cached chunk program after a run:
+  1 means compiled once and replayed; >= 2 means a retrace happened.
+
+Typical use (also what ``repro.analysis.lint`` and the pytest gate do)::
+
+    sentinel = RecompileSentinel()
+    sentinel.record(tag, engine.traced_chunk(state, data, key, K), ...)
+    ... run simulate(..., scan_chunk=K) ...
+    violations = sentinel.check_engine(tag, engine)
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Tuple
+
+from repro.analysis.jaxpr import Violation
+
+
+def fingerprint(closed, avals=None) -> str:
+    """Stable hash of a closed jaxpr + the avals it was traced at."""
+    h = hashlib.sha256()
+    h.update(str(closed).encode())
+    if avals is None:
+        avals = [getattr(v, "aval", None) for v in closed.jaxpr.invars]
+    h.update("|".join(str(a) for a in avals).encode())
+    return h.hexdigest()[:16]
+
+
+class RecompileSentinel:
+    """Tracks one expected compilation per (algorithm, codec, chunk-length)
+    tag; reports any second compilation as a violation."""
+
+    def __init__(self):
+        self._prints: Dict[Tuple, str] = {}
+        self.violations: List[Violation] = []
+
+    def record(self, tag, closed, avals=None) -> None:
+        """Pin ``tag`` to the fingerprint of ``closed``; a later ``record``
+        for the same tag must match or the sentinel trips."""
+        fp = fingerprint(closed, avals)
+        old = self._prints.get(tag)
+        if old is None:
+            self._prints[tag] = fp
+        elif old != fp:
+            self.violations.append(Violation(
+                "recompile", f"{tag}",
+                f"traced program changed mid-run: fingerprint {old} -> "
+                f"{fp} (second compilation for this tag)"))
+
+    def check_engine(self, tag, engine) -> List[Violation]:
+        """Interrogate a :class:`~repro.fed.engine.RoundEngine`'s jit caches
+        after a run: every cached chunk program must have compiled exactly
+        once (``_cache_size() == 1``)."""
+        out: List[Violation] = []
+        for length, fn in getattr(engine, "_chunk_fns", {}).items():
+            size = _cache_size(fn)
+            if size is None:
+                continue
+            if size > 1:
+                out.append(Violation(
+                    "recompile", f"{tag}/chunk{length}",
+                    f"chunk program compiled {size} times for one run "
+                    f"(retrace mid-run: aval/weak-type drift in the carry)"))
+            elif size == 0:
+                out.append(Violation(
+                    "recompile", f"{tag}/chunk{length}",
+                    "chunk program cached but never compiled (engine "
+                    "bypassed its own cache)"))
+        self.violations.extend(out)
+        return out
+
+    def report(self) -> List[Violation]:
+        return list(self.violations)
+
+
+def _cache_size(fn):
+    try:
+        return fn._cache_size()
+    except AttributeError:
+        return None

@@ -3,8 +3,7 @@ from repro.compression.lattice import (IdentityQuantizer, LatticeMsg,  # noqa: F
                                        make_quantizer)
 from repro.compression.pipeline import (BACKENDS, Backend,  # noqa: F401
                                         ExchangePipeline, LatticeWire,
-                                        RotationStats, get_backend,
-                                        wrap_gamma)
+                                        get_backend, wrap_gamma)
 from repro.compression.codecs import (Codec, GroupedLatticeCodec,  # noqa: F401
                                       IdentityCodec, LatticeCodec,
                                       ScalarCodec, TopKEFCodec,

@@ -10,7 +10,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.compression.lattice import LatticeMsg, QSGDQuantizer

@@ -31,7 +31,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compression.rotation import DEFAULT_BLOCK, _signs, pad_len
 from repro.compression.pipeline import (GAMMA_NORM_FLOOR, coord_bound,

@@ -36,8 +36,9 @@ inverse-rotated. Per round with ``s`` sampled clients this costs exactly
     state, rotated back only after averaging,
 
 down from the seed composition's ``5s + 1`` full-model rotation passes (and
-the first fused version's ``s + 2`` forward). A trace-time ``RotationStats``
-counter audits this invariant in the tests.
+the first fused version's ``s + 2`` forward). A trace-time counter
+(:class:`repro.analysis.opbudget.OpBudget`, exposed as ``pipeline.stats``)
+audits this invariant in the tests and the ``repro.analysis.lint`` gate.
 
 The downlink decode reference is the client's **current** model Y^i (the
 model it holds when the reply arrives) rather than its pre-round state X^i;
@@ -50,7 +51,7 @@ for the fused path (tests assert fp32-level agreement on full rounds).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
@@ -248,15 +249,10 @@ def get_backend(name: str) -> Backend:
 # ---------------------------------------------------------------------------
 # rotation audit counter (trace-time: counts are structural, not data-dep.)
 # ---------------------------------------------------------------------------
-
-@dataclass
-class RotationStats:
-    fwd: int = 0    # full-model forward rotation passes
-    inv: int = 0    # full-model inverse rotation passes
-
-    def reset(self):
-        self.fwd = 0
-        self.inv = 0
+# The counter class itself lives in repro.analysis.opbudget (promoted from
+# the bespoke RotationStats that used to be defined here); the pipeline
+# keeps incrementing ``self.stats.fwd`` / ``.inv`` at trace time and the
+# analyzer audits the counts against the declared budget.
 
 
 # ---------------------------------------------------------------------------
@@ -272,8 +268,9 @@ class ExchangePipeline:
     safety: float = 8.0
 
     def __post_init__(self):
+        from repro.analysis.opbudget import OpBudget
         self.ops = get_backend(self.backend)
-        self.stats = RotationStats()
+        self.stats = OpBudget()
 
     # -- helpers ------------------------------------------------------------
     def _pad(self, x2):

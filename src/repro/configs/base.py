@@ -7,7 +7,7 @@ Every assigned architecture gets one file in this package with a ``config()``
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

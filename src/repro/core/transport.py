@@ -30,7 +30,6 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.compression.lattice import LatticeMsg

@@ -12,7 +12,7 @@ non-iid knob: each client permutes the vocab differently).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

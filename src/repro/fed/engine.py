@@ -227,6 +227,80 @@ class RoundEngine:
         self.tuned_chunk = best
         return best
 
+    def _chunk_program(self, length: int):
+        """The python chunk body for ``length`` rounds — the ONE closure
+        shared by :meth:`run_chunk` (jitted + donated), :meth:`traced_chunk`
+        (jaxpr for the analyzers), and :meth:`lowered_chunk` (compiled
+        executable for the donation audit)."""
+        round_fn = self.alg.device_round
+
+        def run(state, data, key):
+            def body(carry, _):
+                k, st = carry
+                k, sub = jax.random.split(k)
+                st, m = round_fn(st, data, sub)
+                return (k, st), m
+
+            (k, st), ms = jax.lax.scan(body, (key, state), None,
+                                       length=length)
+            return k, st, ms
+
+        return run
+
+    def _commit_carry(self, state, key):
+        """Normalize the carry of a MESH-sharded state and return
+        ``(state, key, out_shardings)``; single-device states pass through
+        with ``out_shardings=None``.
+
+        Two-part contract for mesh states (spmd): every unplaced leaf (host
+        scalars from ``init``, the caller's host-made key) is placed
+        replicated on the state's mesh, and the chunk outputs are pinned to
+        the input shardings. Without both, the carry is not a fixed point:
+        GSPMD repicks output layouts freely (a physical reshard of every
+        leaf per chunk on a real mesh) and the first call's
+        uncommitted-leaf signature differs from every later one — a silent
+        recompile per run, which the recompile sentinel flags.
+
+        Single-device states are left alone: their carry signature is
+        already stable, and pinning ``out_shardings`` there would itself
+        split the jit cache on the first call's uncommitted inputs."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        mesh = None
+        for leaf in jax.tree_util.tree_leaves(state):
+            sh = getattr(leaf, "sharding", None)
+            if isinstance(sh, NamedSharding):
+                mesh = sh.mesh
+                break
+        if mesh is None:
+            return state, key, None
+        repl = NamedSharding(mesh, PartitionSpec())
+
+        def place(leaf):
+            if (hasattr(leaf, "sharding")
+                    and not isinstance(leaf.sharding, NamedSharding)):
+                return jax.device_put(leaf, repl)
+            return leaf
+
+        state = jax.tree_util.tree_map(place, state)
+        key = jax.device_put(key, repl)
+        state_sh = jax.tree_util.tree_map(lambda l: l.sharding, state)
+        return state, key, (key.sharding, state_sh, None)
+
+    def chunk_fn(self, length: int, carry_out=None):
+        """The cached jitted chunk program for ``length`` (compiling it on
+        first use, with the carry outputs pinned to ``carry_out`` when
+        given). Exposed so the recompile sentinel can interrogate the jit
+        cache (``fn._cache_size()``) after a run."""
+        fn = self._chunk_fns.get(length)
+        if fn is None:
+            kw = {}
+            if carry_out is not None:
+                kw["out_shardings"] = carry_out
+            fn = jax.jit(self._chunk_program(length), donate_argnums=(0,),
+                         **kw)
+            self._chunk_fns[length] = fn
+        return fn
+
     def run_chunk(self, state, data, key, length: int):
         """Advance ``length`` rounds on device.
 
@@ -244,21 +318,30 @@ class RoundEngine:
         custom = getattr(self.alg, "scan_rounds", None)
         if custom is not None:
             return custom(state, data, key, length)
-        fn = self._chunk_fns.get(length)
-        if fn is None:
-            round_fn = self.alg.device_round
+        state, key, carry_out = self._commit_carry(state, key)
+        return self.chunk_fn(length, carry_out)(state, data, key)
 
-            def run(state, data, key):
-                def body(carry, _):
-                    k, st = carry
-                    k, sub = jax.random.split(k)
-                    st, m = round_fn(st, data, sub)
-                    return (k, st), m
+    # -- analyzer hooks (repro.analysis) ------------------------------------
 
-                (k, st), ms = jax.lax.scan(body, (key, state), None,
-                                           length=length)
-                return k, st, ms
+    def traced_round(self, state, data, key):
+        """Closed jaxpr of ONE round — ``device_round`` exactly as the scan
+        body calls it. Tracing is abstract: no device work, no state
+        consumed."""
+        return jax.make_jaxpr(
+            lambda st, d, k: self.alg.device_round(st, d, k)
+        )(state, data, key)
 
-            fn = jax.jit(run, donate_argnums=(0,))
-            self._chunk_fns[length] = fn
-        return fn(state, data, key)
+    def traced_chunk(self, state, data, key, length: int):
+        """Closed jaxpr of the ``length``-round scanned chunk program (the
+        same closure :meth:`run_chunk` jits, including the per-round
+        ``key, sub = split(key)`` schedule)."""
+        return jax.make_jaxpr(self._chunk_program(length))(state, data, key)
+
+    def lowered_chunk(self, state, data, key, length: int):
+        """The chunk program lowered with the donation contract of
+        :meth:`run_chunk` (``donate_argnums=(0,)``) — ``.compile()`` it to
+        audit the executable's input-output aliasing. Deliberately NOT the
+        cached run fn: auditing must not warm (or be confused by) the run
+        cache."""
+        return jax.jit(self._chunk_program(length),
+                       donate_argnums=(0,)).lower(state, data, key)

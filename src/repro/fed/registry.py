@@ -59,7 +59,7 @@ imports ``repro.fed.clock``, so eager imports here would be circular.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 from repro.configs.base import FedConfig
 from repro.fed.api import FedAlgorithm

@@ -10,9 +10,7 @@ Hadamard core executed by the MXU kernel.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compression.rotation import (DEFAULT_BLOCK, _block_size, _factor,
                                         _signs, pad_len)

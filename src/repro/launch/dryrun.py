@@ -25,10 +25,10 @@ from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import FedConfig
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import abstract_cache, input_specs
-from repro.launch.steps import (abstract_train_state, build_prefill_step,
-                                build_serve_step, build_train_step,
-                                fed_mode_for, n_slots_for)
+from repro.launch.specs import input_specs
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step, fed_mode_for,
+                                n_slots_for)
 
 
 def shape_skip_reason(cfg, shape) -> str:

@@ -153,13 +153,11 @@ def _parse(text: str) -> Dict[str, Comp]:
                             contracted *= lhs_dims[ci]
             cur.flops += 2.0 * out_elems * contracted
 
-        matched_coll = False
         for kind in COLLECTIVES:
             if op == kind or op == kind + "-start":
                 slot = cur.coll.setdefault(kind, {"bytes": 0.0, "count": 0})
                 slot["bytes"] += res_bytes
                 slot["count"] += 1
-                matched_coll = True
                 break
 
         if op == "while":

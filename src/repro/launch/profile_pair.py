@@ -14,10 +14,8 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import FedConfig
-from repro.launch.dryrun import lower_pair
 from repro.launch.hlocost import top_contributors
 from repro.launch.mesh import make_production_mesh
-from repro.launch import dryrun as dr
 
 
 def main():

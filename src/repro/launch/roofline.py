@@ -49,7 +49,6 @@ _COLL_RE = re.compile(
 def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
     """kind -> {'bytes': total result bytes, 'count': n ops}."""
     out: Dict[str, Dict[str, float]] = {}
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
@@ -104,7 +103,6 @@ def active_params(cfg) -> float:
 
 
 def tokens_per_step(cfg, shape, local_steps: int, n_slots: int) -> float:
-    from repro.launch.specs import _train_text_len
     if shape.kind == "train":
         b_local = max(shape.global_batch // n_slots, 1)
         return n_slots * local_steps * b_local * shape.seq_len

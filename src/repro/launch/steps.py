@@ -16,7 +16,7 @@ the step (paper App. B.1 equivalence).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +28,11 @@ from repro.compression.transports import transport_for_mode
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
 from repro.core.quafl import client_speeds
 from repro.core.transport import leaf_dist, tree_decode, tree_encode
-from repro.launch.specs import (abstract_cache, cache_axes, enc_len_for,
-                                input_axes, input_specs)
+from repro.launch.specs import (abstract_cache, enc_len_for, input_axes,
+                                input_specs)
 from repro.models.model import (abstract_lm, decode_step, forward, init_cache,
                                 lm_loss)
-from repro.sharding.rules import pspec_for, rules_for_mode, tree_pspecs
-from repro.utils.tree import fold_in_str
+from repro.sharding.rules import pspec_for, rules_for_mode
 
 # architectures too large for per-data-slice client replicas get cohort mode
 FED_MODE: Dict[str, str] = {

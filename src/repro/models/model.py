@@ -10,7 +10,6 @@ Caches mirror the layer paths.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Dict, Optional
 
 import jax
@@ -24,7 +23,7 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import (apply_mlp, embed_tokens, init_embed,
                                  init_mlp, lm_logits, rms_norm)
-from repro.models.params import Ctx, SubCtx, subtree
+from repro.models.params import Ctx, subtree
 
 Constrain = Optional[Callable[[jax.Array], jax.Array]]
 
@@ -244,7 +243,6 @@ def _encode(cfg, params, frontend, constrain: Constrain = None):
     """Bidirectional encoder over stub frontend embeddings (b, t, d)."""
     x = frontend.astype(jnp.dtype(cfg.dtype))
     body = subtree(params, "enc/body/0")
-    spec = LayerSpec()
     positions = jnp.arange(x.shape[1])
 
     def step(carry, p_slice):

@@ -113,7 +113,6 @@ def _moe_ragged_shmap(cfg, p, x, weights, idx, pre):
     from jax.sharding import PartitionSpec as P
     mesh = _MOE_MESH
     assert mesh is not None, "set_moe_mesh(mesh) before using ragged_shmap"
-    m = cfg.moe
 
     def local(xl, wl, il, wg, wu, wd):
         yl = _moe_ragged(cfg, {f"{pre}w_gate": wg, f"{pre}w_up": wu,

@@ -9,7 +9,7 @@ serving is inference of the federated result (DESIGN.md §4).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

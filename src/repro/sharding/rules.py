@@ -8,9 +8,8 @@ dim shards instead, which is why projection weights use flattened head dims).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Union
+from typing import Dict, Sequence, Union
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Rule = Union[None, str, Sequence[str]]
