@@ -17,22 +17,42 @@ messages) in the derived column. The committed baseline pins the packing
 claim: ``lattice_packed`` at b=4 carries ~2x fewer ``bits_up`` than the
 unpacked 4-bit row.
 
+**Grouped dimension** (``exchange_codec_grouped_*`` rows): the same batched
+exchange with HETEROGENEOUS per-message wrap moduli — half the sampled
+clients at b=4, half at b=8, one levels row riding the kernels — on both
+backends (the levels-row operand is the Pallas-side tentpole of the fused
+distributed exchange).
+
+**Redistribution dimension** (``exchange_rs_fused_*`` rows): the
+scatter-resident coded re-gather of the fused ``reduce_scatter`` transport
+(:func:`repro.compression.transports.scatter_encode_gather` — the same
+kernel calls the distributed path makes, minus the collectives). The
+derived column carries the wire math: ``bytes_fused`` (packed codes + the
+(n-1) extra γ shards) vs ``bytes_fp32`` (the fp32 re-gather it replaces) —
+at b=4 packed the ratio pins ~b/32 = 1/8.
+
 CPU caveat (same as bench_kernels): interpret-mode Pallas timing is a
 correctness-validation datapoint, NOT a TPU projection — the interpreter
-executes the grid serially. The jnp rows are the regression-tracked
-numbers; the derived column carries the analytic traffic model used by the
-roofline."""
+executes the grid serially, so interpret rows run at the REDUCED
+``D_INTERP`` size (the record name encodes d; the full-size interpret rows
+took ~10 min/call and measured only the interpreter loop). The jnp rows
+are the regression-tracked numbers; the derived column carries the
+analytic traffic model used by the roofline."""
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
-from repro.compression.codecs import make_codec
-from repro.compression.pipeline import ExchangePipeline
+from repro.compression.codecs import make_codec, resolve_codec
+from repro.compression.pipeline import ExchangePipeline, LatticeWire
 from repro.compression.rotation import pad_len
+from repro.compression.transports import scatter_encode_gather
+from repro.configs.base import FedConfig
 
 D_FULL = 1 << 20          # 1,048,576 >= 1M parameters
+D_INTERP = 1 << 15        # serial-interpreter rows: validation, not speed
 BITS = 8
 CODEC_SPECS = ("lattice", "lattice:bits=4", "lattice_packed:bits=4")
 
@@ -101,20 +121,92 @@ def bench_codec_round(d: int, s: int, spec: str, backend: str, reps: int):
          f"pack={codec.pack}")
 
 
+def bench_grouped_round(d: int, s: int, backend: str, reps: int):
+    """Heterogeneous-moduli exchange: half the sampled clients at b=4, half
+    at b=8 — ONE batched round, the mixed wrap moduli riding the kernels as
+    the per-message levels row (no extra rotation passes)."""
+    fed = FedConfig(n_clients=s, s=s, bits=BITS, kernel_backend=backend)
+    g = resolve_codec({"fast": "lattice", "slow": "lattice_packed:bits=4"},
+                      fed, direction="up",
+                      slow_mask=np.arange(s) < s // 2)
+    key = jax.random.PRNGKey(0)
+    server = jax.random.normal(key, (d,))
+    Y = server[None] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (s, d))
+    hints = jnp.linalg.norm(Y - server[None], axis=1) + 1e-8
+    pipe = ExchangePipeline(bits=g.bits, block=g.block, safety=g.safety,
+                            backend=backend)
+    up = g.wire()
+    down = LatticeWire(bits=BITS)
+    fn = jax.jit(lambda k, srv, y, h: pipe.quafl_round(k, srv, y, h,
+                                                       up=up, down=down))
+    jax.block_until_ready(fn(key, server, Y, hints))      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(key, server, Y, hints))
+    us = (time.time() - t0) / reps * 1e6
+    bits_up = int(sum(g.message_bits_per_client(d)))
+    widths = "/".join(map(str, g.wire_width_per_client))
+    emit(f"exchange_codec_grouped_fast8_slow4_d{d}_s{s}_{backend}", us,
+         f"bits_up={bits_up};widths={widths}")
+
+
+def bench_rs_fused(d: int, n: int, spec: str, backend: str, reps: int):
+    """Scatter-resident coded redistribution of the fused reduce_scatter
+    transport: encode each of the ``n`` reduced shards at the wire width,
+    snap the gathered codes against the reference — the derived column is
+    the wire math of the re-gather (packed codes + the n-1 extra γ shards)
+    vs the fp32 all-gather it replaces."""
+    codec = make_codec(spec, bits=BITS, backend=backend)
+    pipe = ExchangePipeline(bits=codec.bits, block=codec.block,
+                            safety=codec.safety, backend=backend)
+    wire = codec.wire()
+    key = jax.random.PRNGKey(0)
+    d_pad = pad_len(d, codec.block)
+    vec = jax.random.normal(key, (1, d_pad))
+    ref = vec + 0.05 * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (1, d_pad))
+    hint = jnp.linalg.norm(vec - ref) + 1e-8
+    gam = pipe.gammas(hint[None], jnp.linalg.norm(vec)[None], d_pad, wire)
+    fn = jax.jit(lambda v, r, g, k: scatter_encode_gather(
+        pipe, wire, v, r, g, k, n))
+    jax.block_until_ready(fn(vec, ref, gam, key))         # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(vec, ref, gam, key))
+    us = (time.time() - t0) / reps * 1e6
+    bytes_fp32 = d_pad * 4
+    bytes_fused = (codec.message_bits(d_pad) + (n - 1) * 32) // 8
+    name = spec.replace(":", "_").replace("=", "")
+    emit(f"exchange_rs_fused_{name}_d{d}_n{n}_{backend}", us,
+         f"bytes_fused={bytes_fused};bytes_fp32={bytes_fp32};"
+         f"ratio={bytes_fused / bytes_fp32:.4f}")
+
+
 def main(quick: int = 0):
     d = (1 << 17) if quick else D_FULL
+    di = (1 << 14) if quick else D_INTERP
     for s in (8, 32):
-        # interpret mode runs the grid serially: one rep is plenty and the
-        # number is a validation datapoint, not a projection
+        # interpret mode runs the grid serially: one rep at the reduced
+        # size is plenty — a validation datapoint, not a projection
         bench_round(d, s, "jnp", reps=3)
-        bench_round(d, s, "pallas_interpret", reps=1)
+        bench_round(di, s, "pallas_interpret", reps=1)
     # codec dimension: wire formats over the same exchange (jnp rows are
     # the regression-tracked numbers; one packed pallas_interpret row
     # validates the in-kernel pack/unpack path)
     for spec in CODEC_SPECS:
         bench_codec_round(d, 8, spec, "jnp", reps=2)
-    bench_codec_round(d, 8, "lattice_packed:bits=4", "pallas_interpret",
+    bench_codec_round(di, 8, "lattice_packed:bits=4", "pallas_interpret",
                       reps=1)
+    # grouped (heterogeneous moduli) rows: the levels-row kernels on both
+    # backends
+    bench_grouped_round(d, 8, "jnp", reps=2)
+    bench_grouped_round(di, 8, "pallas_interpret", reps=1)
+    # scatter-resident coded redistribution (fused reduce_scatter wire)
+    bench_rs_fused(d, 8, "lattice_packed:bits=4", "jnp", reps=3)
+    bench_rs_fused(d, 8, "lattice", "jnp", reps=3)
+    bench_rs_fused(di, 8, "lattice_packed:bits=4", "pallas_interpret",
+                   reps=1)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ the canonical FIX for reuse).
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import Counter, defaultdict
 from typing import Any, Dict, Iterator, List, Tuple
 
@@ -346,12 +347,50 @@ def op_counts(closed) -> Counter:
     return Counter(e.primitive.name for e in iter_eqns(_as_jaxpr(closed)))
 
 
+# collectives whose per-device payload the report estimates: gathers charge
+# their OUTPUT avals (bytes every device receives), reductions their INPUT
+# avals (bytes every device contributes)
+_GATHER_OPS = frozenset({"all_gather"})
+_REDUCE_OPS = frozenset({"psum", "psum_scatter", "reduce_scatter",
+                         "all_reduce", "ppermute"})
+
+
+def collective_bytes(closed) -> Dict[str, int]:
+    """Per-device moved-bytes estimate for every collective in the trace,
+    split by element kind: ``<prim>_fbytes`` (float payload) vs
+    ``<prim>_ibytes`` (integer codes). This is the quantity a regression
+    from the coded redistribution back to an fp32 re-gather inflates by
+    ~d·4 — counts alone cannot see it (same number of ``all_gather`` eqns,
+    radically different wire)."""
+    out: Dict[str, int] = {}
+    for eqn in iter_eqns(_as_jaxpr(closed)):
+        name = eqn.primitive.name
+        if name in _GATHER_OPS:
+            vs = eqn.outvars
+        elif name in _REDUCE_OPS:
+            vs = eqn.invars
+        else:
+            continue
+        for v in vs:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None or not hasattr(dt, "itemsize"):
+                continue
+            kind = "f" if getattr(dt, "kind", "") == "f" else "i"
+            key = f"{name}_{kind}bytes"
+            out[key] = out.get(key, 0) + (int(math.prod(aval.shape))
+                                          * int(dt.itemsize))
+    return out
+
+
 def op_report(closed) -> Dict[str, int]:
-    """The tracked subset of :func:`op_counts` plus total eqn count —
-    transfer/convert and collective counts that make e.g. the known fp32
-    re-gather after ``psum_scatter`` visible as a counted quantity."""
+    """The tracked subset of :func:`op_counts` plus the per-collective
+    moved-bytes estimate and total eqn count — transfer/convert and
+    collective traffic that make e.g. the known fp32 re-gather after
+    ``psum_scatter`` visible as a counted AND sized quantity."""
     c = op_counts(closed)
     rep = {k: c[k] for k in TRACKED_OPS if c[k]}
+    rep.update(collective_bytes(closed))
     rep["eqns_total"] = sum(c.values())
     return rep
 

@@ -12,6 +12,10 @@ Runs both halves of :mod:`repro.analysis` and writes a machine-readable
   (one compile per (algorithm, chunk length)).
 * **AST rules** — :func:`repro.analysis.astlint.lint_path` over
   ``src/repro/``.
+* **rs transport byte budget** — the fused ``shard_local_rs`` exchange is
+  traced on an abstract (4, 2) mesh and its per-device collective payload
+  audited (:func:`rs_transport_audit`): the redistribution all-gather must
+  move integer codes + scalar γ rows, never the fp32 aggregate.
 
 Exit status is the number of violations (0 = clean). Flags::
 
@@ -195,6 +199,59 @@ def sentinel_run(alg_name: str, *, rounds: int = 4, chunk: int = 2,
             "compiles": compiles}
 
 
+def rs_transport_audit(d: int = 1 << 16, n: int = 4) -> Dict:
+    """Trace the fused ``shard_local_rs`` exchange on an ABSTRACT (4, 2)
+    data×model mesh (no devices needed — ``AbstractMesh`` + ``make_jaxpr``
+    trace the same shard_map program a pod runs) and budget its per-device
+    collective payload:
+
+      * the redistribution ``all_gather`` must move integer codes plus
+        scalar f32 γ rows only — a regression back to the fp32 re-gather
+        (``all_gather_fbytes`` jumping from a handful of scalars to d·4)
+        fails the gate,
+      * no full-size fp32 ``psum`` may sneak back in either (the
+        exact-psum fallback silently replacing the coded path on a
+        shardable chunk would show up as ``psum_fbytes`` ≈ d·4).
+
+    The reducing phase (``psum_scatter`` of the snapped fp32 chunks) is
+    the one collective that legitimately moves d·4 float bytes.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.analysis.jaxpr import analyze_jaxpr
+    from repro.analysis.opbudget import check_collective_bytes
+    from repro.compression.codecs import resolve_codec
+    from repro.compression.transports import transport_for_mode
+    from repro.configs.base import FedConfig
+    from repro.core.exchange_local import make_shardlocal_exchange
+
+    mesh = AbstractMesh((("data", n), ("model", 2)))
+    fed = FedConfig(n_clients=n, s=n, bits=8,
+                    codec_up="lattice_packed:bits=4",
+                    codec_down="lattice_packed:bits=4")
+    up = resolve_codec(None, fed, direction="up")
+    dn = resolve_codec(None, fed, direction="down")
+    ex = make_shardlocal_exchange(
+        up, dn, mesh, {"w": P()}, {"w": P("data")}, "data", n,
+        transport=transport_for_mode("shard_local_rs"))
+    srv = {"w": jax.ShapeDtypeStruct((d,), jnp.float32)}
+    cl = {"w": jax.ShapeDtypeStruct((n, d), jnp.float32)}
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    closed = jax.make_jaxpr(ex)(srv, cl, cl, key)
+
+    where = "shard_local_rs/exchange@mesh(4,2)"
+    viols, ops = analyze_jaxpr(closed, where)
+    # scalar side-channel budget: γ rows + hint psums are O(n) f32 words
+    # per leaf; the uplink codes ride the all_gather as (packed) ints
+    viols += check_collective_bytes(closed, where, {
+        "all_gather_fbytes": 64 * n,
+        "psum_fbytes": 4096,
+        "all_gather_ibytes": d,
+    })
+    return {"ops": ops, "violations": [v.as_dict() for v in viols]}
+
+
 def run_lint(*, quick: bool = False, only: Optional[str] = None,
              donation: Optional[bool] = None,
              sentinel: Optional[bool] = None, verbose: bool = True) -> Dict:
@@ -225,6 +282,22 @@ def run_lint(*, quick: bool = False, only: Optional[str] = None,
             status = ("ok" if not rep["violations"]
                       else f"{len(rep['violations'])} VIOLATIONS")
             print(f"# {cell}: {status} ({rep['seconds']}s)", flush=True)
+    rs_rep: Dict = {}
+    if only is None or only in "shard_local_rs":
+        tr = time.time()
+        try:
+            rs_rep = rs_transport_audit()
+        except Exception as e:
+            rs_rep = {"violations": [{
+                "rule": "analyzer-error", "where": "shard_local_rs",
+                "detail": f"{type(e).__name__}: {e}"}]}
+        rs_rep["seconds"] = round(time.time() - tr, 2)
+        n_viols += len(rs_rep["violations"])
+        if verbose:
+            status = ("ok" if not rs_rep["violations"]
+                      else f"{len(rs_rep['violations'])} VIOLATIONS")
+            print(f"# rs_transport: {status} ({rs_rep['seconds']}s)",
+                  flush=True)
     sentinels: Dict[str, Dict] = {}
     if sentinel:
         for alg_name, codec in _cells(only):
@@ -252,6 +325,7 @@ def run_lint(*, quick: bool = False, only: Optional[str] = None,
         "ast": {"root": src_root,
                 "violations": [v.as_dict() for v in ast_viols]},
         "matrix": matrix,
+        "rs_transport": rs_rep,
         "sentinel": sentinels,
         "seconds": round(time.time() - t0, 2),
     }
@@ -286,8 +360,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if n:
         for v in report["ast"]["violations"]:
             print(f"AST  {v['rule']} {v['where']}: {v['detail']}")
-        for cell, rep in list(report["matrix"].items()) + \
-                list(report["sentinel"].items()):
+        for cell, rep in (list(report["matrix"].items())
+                          + [("rs_transport", report["rs_transport"])]
+                          + list(report["sentinel"].items())):
             for v in rep.get("violations", []):
                 print(f"JXPR {v['rule']} {v['where']}: {v['detail']}")
     return min(n, 125)

@@ -25,7 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.analysis.jaxpr import Violation, op_report
+from repro.analysis.jaxpr import Violation, collective_bytes, op_report
 
 # counter names the rotation audit uses
 ROT_FWD = "rotation_fwd"
@@ -81,6 +81,24 @@ class OpBudget:
                     "op-budget", where,
                     f"counter {name!r}: {got} != budgeted {want}"))
         return out
+
+
+def check_collective_bytes(closed, where: str,
+                           caps: Dict[str, int]) -> List[Violation]:
+    """Judge a trace's per-device collective payload
+    (:func:`repro.analysis.jaxpr.collective_bytes`) against byte CAPS —
+    upper bounds, not exact counts, because scalar side-channel rows may
+    legitimately come and go. One violation per blown cap; a cap on a key
+    the trace never produces passes vacuously (0 bytes moved)."""
+    rep = collective_bytes(closed)
+    out = []
+    for key, cap in caps.items():
+        got = rep.get(key, 0)
+        if got > cap:
+            out.append(Violation(
+                "collective-bytes", where,
+                f"{key}: {got} B moved exceeds budget {cap} B"))
+    return out
 
 
 def rotation_budget(s: int) -> Dict[str, int]:

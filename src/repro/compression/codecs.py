@@ -231,9 +231,10 @@ class GroupedLatticeCodec(CodecBase):
     ``bits_per_client`` assigns each client its own bit-width; the fused
     rotated-space pipeline runs ONE batched exchange with per-message wrap
     moduli (``LatticeWire.levels``), so a round can mix b=8 fast clients
-    with b=4 stragglers at no extra rotation passes. jnp backend only (the
-    Pallas kernels bake the modulus statically); uplink only (the downlink
-    broadcast is one message).
+    with b=4 stragglers at no extra rotation passes. Runs on every kernel
+    backend — the Pallas kernels take the moduli as a lane-aligned levels
+    row next to the γ rows. Uplink only (the downlink broadcast is one
+    message).
 
     Wire accounting is the MEMBER codec's: ``wire_width_per_client[i]`` is
     the bits/coordinate the client's group declared — ``lattice`` members
@@ -252,11 +253,6 @@ class GroupedLatticeCodec(CodecBase):
     packed: bool = False
 
     def __post_init__(self):
-        if self.backend != "jnp":
-            raise NotImplementedError(
-                "per-client heterogeneous bit-widths need per-message wrap "
-                "moduli, which only the 'jnp' backend supports (the Pallas "
-                "kernels bake the modulus statically)")
         assert len(self.wire_width_per_client) == len(self.bits_per_client)
         object.__setattr__(self, "bits", int(max(self.bits_per_client)))
         object.__setattr__(self, "_levels_j", jnp.asarray(

@@ -76,8 +76,8 @@ class LatticeWire(NamedTuple):
     ``lattice_packed`` codec; 1 = historical unpacked layout); ``levels``
     optionally carries PER-MESSAGE quantization levels (a (m,) f32 array of
     powers of two <= 2^bits) for heterogeneous per-client bit budgets —
-    supported by the ``jnp`` backend only, since the Pallas kernels bake the
-    wrap modulus statically.
+    supported by every backend: the Pallas kernels take the moduli as a
+    lane-aligned levels row riding next to the γ rows.
     """
     bits: int
     pack: int = 1
@@ -129,8 +129,8 @@ class Backend(NamedTuple):
 
     The quantizing ops additionally take ``pack`` (sub-byte packed codes,
     :mod:`repro.kernels.exchange` layout) and ``levels2`` (optional
-    per-message quantization levels for heterogeneous bit budgets; ``jnp``
-    backend only — the Pallas kernels bake the wrap modulus statically).
+    per-message quantization levels for heterogeneous bit budgets — on the
+    Pallas backends the moduli ride as a lane-aligned levels row).
     """
     name: str
     rotate: Callable    # (x2, signs, *, block, inverse) -> y2
@@ -208,26 +208,14 @@ def _decode_jnp(codes2, ref2, signs, gammas, *, bits=8, block=DEFAULT_BLOCK,
     return _rotate_jnp(xr, signs, block=block, inverse=True)
 
 
-def _no_levels(fn, name):
-    """Pallas ops reject per-message levels (static wrap modulus)."""
-    def wrapped(*args, levels2=None, **kw):
-        if levels2 is not None:
-            raise NotImplementedError(
-                f"per-message levels (heterogeneous bit-widths) are only "
-                f"supported by the 'jnp' backend, not {name!r}")
-        return fn(*args, **kw)
-    return wrapped
-
-
 def _pallas_backend(name: str, interpret: bool) -> Backend:
     return Backend(
         name=name,
         rotate=partial(fused_rotate, interpret=interpret),
-        encode=_no_levels(partial(fused_encode, interpret=interpret), name),
-        quantize=_no_levels(partial(quantize_codes, interpret=interpret),
-                            name),
-        snap=_no_levels(partial(snap_codes, interpret=interpret), name),
-        decode=_no_levels(partial(fused_decode, interpret=interpret), name),
+        encode=partial(fused_encode, interpret=interpret),
+        quantize=partial(quantize_codes, interpret=interpret),
+        snap=partial(snap_codes, interpret=interpret),
+        decode=partial(fused_decode, interpret=interpret),
     )
 
 

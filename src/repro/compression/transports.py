@@ -13,15 +13,31 @@ cross the wire:
   ``code_allgather``  all-gather the PACKED codec codes (uint8/16 — or the
                       sub-byte ``lattice_packed`` bytes, at b=4 HALF the
                       unpacked payload) + decode every message locally
-  ``reduce_scatter``  NEW: snap locally in rotated space, ``psum_scatter``
-                      the snapped chunks over the client axis, then
-                      all-gather the reduced shards — the ROADMAP fusion
-                      item: the reduce phase moves (n-1)/n · d words where
-                      the fp32 all-reduce moves 2·(n-1)/n · d, halving the
-                      uplink payload of the collective
+  ``reduce_scatter``  snap locally in rotated space, ``psum_scatter`` the
+                      snapped chunks over the client axis, then move the
+                      reduced shards back as a SCATTER-RESIDENT COMPRESSED
+                      downlink: each device lattice-encodes its own reduced
+                      shard and the all-gather carries packed integer codes
+                      plus a γ-shards row instead of fp32 — the receiver
+                      snaps the gathered codes against n·rot(X_t) post-
+                      gather. The redistribution phase moves width/32 of
+                      the fp32 re-gather bytes (b=4 packed: 1/8). The
+                      aggregate is re-quantized at the downlink wire width
+                      (the per-client lattices share no common grid, so an
+                      exact coded re-gather is impossible); the error obeys
+                      the same Lemma 3.1 wrap bound as the downlink encode
+                      and the transport stays bit-identical across kernel
+                      backends.
 
+``shard_local`` and ``code_allgather`` compute the SAME aggregate (pinned
+against each other in ``tests/test_distributed.py``); ``reduce_scatter``
+agrees up to its γ_rs·√d̄ redistribution quantization, also pinned there.
 Each transport exposes ``lattice_sum`` (rotated-space fused path) and
-``generic_sum`` (per-message codec path). The registry mirrors
+``generic_sum`` (per-message codec path); ``reduce_scatter`` additionally
+exposes ``lattice_fused_sum`` (the scatter-resident coded path — the
+shard-local exchange prefers it when present) and every transport reports
+its gathered fp32 side-channel rows via ``extra_bits_down`` so the wire
+accounting in :mod:`repro.launch.spmd` stays honest. The registry mirrors
 the codec/algorithm registries: select by name
 (``FedConfig.transport = "shard_local_rs"`` maps here via
 :func:`transport_for_mode`), extend via :func:`register_transport`.
@@ -33,6 +49,9 @@ from typing import Dict, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.exchange import block_geometry
+from repro.compression.rotation import pad_len
 
 
 @runtime_checkable
@@ -52,6 +71,43 @@ def _psum_maybe(x, axis, in_mesh):
     return jax.lax.psum(x, axis) if in_mesh else x
 
 
+def _shardable(d_pad: int, n: int, wire, block=None) -> bool:
+    """Can a (1, d_pad) rotated vector be coded per reduce-scatter shard?
+    Each shard must be its own valid block geometry (no repadding inside
+    the collective) and, when the wire packs sub-byte, the shard's Hadamard
+    sublane factor must still divide by ``pack``."""
+    if n <= 1 or d_pad % n:
+        return False
+    d_sh = d_pad // n
+    blk = {} if block is None else {"block": block}
+    if pad_len(d_sh, **blk) != d_sh:
+        return False
+    _, _, r, _, _ = block_geometry(d_sh, **blk)
+    return wire.pack == 1 or r % wire.pack == 0
+
+
+def scatter_encode_gather(pipe, wire, vec_rot, ref_rot, gammas, key, n: int):
+    """Single-host emulation of the scatter-resident coded redistribution.
+
+    Splits the summed ROTATED vector (1, d_pad) into the ``n`` shards a
+    ``psum_scatter`` leaves resident on each device, lattice-encodes every
+    shard at the wire's width (what the all-gather would move), and snaps
+    the gathered codes against the matching shards of ``ref_rot`` — the
+    same kernel calls the distributed ``lattice_fused_sum`` makes, minus
+    the collectives. Returns ``(decoded (1, d_pad), packed_codes
+    (n, d_sh // pack))`` for benches and backend-equivalence tests.
+    """
+    d_pad = vec_rot.shape[-1]
+    d_sh = d_pad // n
+    shards = vec_rot.reshape(n, d_sh)
+    gam_row = jnp.broadcast_to(jnp.asarray(gammas, jnp.float32).reshape(-1),
+                               (n,))
+    u = jax.random.uniform(key, shards.shape, jnp.float32)
+    codes = pipe.quantize(shards, u, gam_row, wire)
+    dec = pipe.snap(codes, ref_rot.reshape(n, d_sh), gam_row, wire)
+    return dec.reshape(1, d_pad), codes
+
+
 @dataclass(frozen=True)
 class ShardLocalPsum:
     """fp32 all-reduce of locally decoded/snapped messages."""
@@ -64,6 +120,10 @@ class ShardLocalPsum:
     def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
                     in_mesh, n_slots):
         return _psum_maybe(qy_own, client_axis, in_mesh)
+
+    def extra_bits_down(self, codec_up, codec_down, d: int, n: int) -> int:
+        """The psum reduction moves no extra redistribution payload."""
+        return 0
 
 
 @dataclass(frozen=True)
@@ -100,16 +160,34 @@ class CodeAllgather:
             qy_sum = qy_sum + quant.decode(key, m_j, srv)
         return qy_sum
 
+    def extra_bits_down(self, codec_up, codec_down, d: int, n: int) -> int:
+        """The gathered per-client γ (and, for a grouped uplink, levels)
+        f32 scalars are redistribution traffic: every device receives every
+        other client's rows. ``message_bits`` already charges each client's
+        OWN γ once (uplink); the other n-1 copies land here."""
+        rows = 1
+        wire = codec_up.wire() if hasattr(codec_up, "wire") else None
+        if wire is not None and getattr(wire, "levels", None) is not None:
+            rows += 1
+        return rows * (n - 1) * 32
+
 
 @dataclass(frozen=True)
 class ReduceScatterSum:
-    """Reduce-scatter the snapped rotated chunks, then all-gather shards.
+    """Reduce-scatter the snapped rotated chunks; coded shard re-gather.
 
     ``psum = reduce_scatter + all_gather``; carrying the sum as an explicit
-    reduce-scatter halves the payload of the reducing phase and leaves the
-    summed shards in place for a future scattered downlink encode (ROADMAP:
-    "fuse the uplink snap into the psum"). Falls back to the plain psum
-    when the chunk length does not tile over the client axis.
+    reduce-scatter halves the payload of the reducing phase AND leaves each
+    device holding its reduced shard — so the redistribution is encoded
+    scatter-resident: every device lattice-quantizes its OWN shard of the
+    aggregate at the downlink wire width and the all-gather moves packed
+    integer codes plus the (n,) γ-shards row instead of fp32. The receiver
+    reassembles the gathered per-shard codes as an (n, d_sh) message batch
+    and snaps them against the matching shards of the reference n·rot(X_t)
+    — the Lemma 3.1 wrap bound holds with hint Σᵢ‖QYᵢ − rot(X_t)‖ by the
+    triangle inequality. Falls back to the plain psum (exact, uncoded) when
+    the chunk does not tile into valid per-shard block geometries
+    (:func:`_shardable`) or outside the mesh.
     """
     name: str = "reduce_scatter"
 
@@ -129,11 +207,51 @@ class ReduceScatterSum:
         return self._rs_ag(qy_own, client_axis,
                            jax.lax.psum(1, client_axis))
 
+    def lattice_fused_sum(self, pipe, wire, qy_own, srv_rot, gam_rs, key,
+                          client_axis):
+        """Scatter-resident compressed redistribution of the client sum.
+
+        ``gam_rs`` is the (1,) redistribution scale (identical on every
+        device — derived from psum'd hints); ``key`` seeds the per-device
+        stochastic-rounding noise (decode never needs it). Returns the
+        re-quantized (1, d_pad) rotated aggregate, bit-identical on every
+        device (same gathered codes, same replicated reference).
+        """
+        n = jax.lax.psum(1, client_axis)
+        d_pad = qy_own.shape[-1]
+        if not _shardable(d_pad, n, wire, pipe.block):
+            return jax.lax.psum(qy_own, client_axis)
+        d_sh = d_pad // n
+        shard = jax.lax.psum_scatter(qy_own, client_axis,
+                                     scatter_dimension=qy_own.ndim - 1,
+                                     tiled=True)            # (1, d_sh)
+        u = jax.random.uniform(key, shard.shape, jnp.float32)
+        codes_sh = pipe.quantize(shard, u, gam_rs, wire)    # (1, d_sh//pack)
+        # the wire: packed integer codes + the γ-shards row, NOT fp32
+        codes_all = jax.lax.all_gather(codes_sh[0], client_axis)
+        gam_all = jax.lax.all_gather(gam_rs[0], client_axis)  # (n,) f32
+        ref_sh = (float(n) * srv_rot).reshape(n, d_sh)
+        qy_hat = pipe.snap(codes_all, ref_sh, gam_all, wire)
+        return qy_hat.reshape(1, d_pad)
+
     def generic_sum(self, quant, key, msg, srv, qy_own, client_axis,
                     in_mesh, n_slots):
         if not in_mesh:
             return qy_own
         return self._rs_ag(qy_own, client_axis, n_slots)
+
+    def extra_bits_down(self, codec_up, codec_down, d: int, n: int) -> int:
+        """The coded shard re-gather replaces the old (uncharged) fp32
+        all-gather: every device receives one downlink-width code message
+        plus the n-1 other γ shards — the codec's own wire math, moved into
+        ``bits_down``."""
+        if not hasattr(codec_down, "wire"):
+            return 0   # generic codec pair: plain rs+ag of fp32 partials
+        blk = getattr(codec_down, "block", None)
+        d_pad = pad_len(d) if blk is None else pad_len(d, blk)
+        if not _shardable(d_pad, n, codec_down.wire(), blk):
+            return 0   # exact-psum fallback: reduction traffic only
+        return codec_down.message_bits(d) + (n - 1) * 32
 
 
 _TRANSPORTS: Dict[str, object] = {

@@ -197,6 +197,11 @@ class FedConfig:
     # aggregation transport on the mesh:
     #  'dequant_psum'  — faithful: decode locally then all-reduce fp32
     #  'code_allgather'— beyond-paper: all-gather packed codes, decode after
+    #  'shard_local' / 'shard_local_codes' / 'shard_local_rs' — the whole
+    #  exchange inside one shard_map (repro.core.exchange_local), client
+    #  sum carried by the named repro.compression.transports strategy
+    #  (fp32 psum / packed-code all-gather / fused reduce_scatter with the
+    #  scatter-resident coded re-gather)
     transport: str = "dequant_psum"
 
 

@@ -16,13 +16,18 @@ only collectives left are the ones the ALGORITHM requires:
     :class:`repro.compression.transports.Transport` strategy — fp32 psum
     (``shard_local``), an all-gather of the packed codec codes
     (``code_allgather``; with ``lattice_packed`` the gathered bytes shrink
-    by the packing factor), or the new ``reduce_scatter`` path that
-    psum-scatters the SNAPPED rotated chunks and all-gathers the reduced
-    shards (the ROADMAP "fuse the uplink snap into the psum" item: the
-    reducing phase moves half the all-reduce payload).
+    by the packing factor), or the fused ``reduce_scatter`` path that
+    psum-scatters the SNAPPED rotated chunks and re-gathers them as a
+    scatter-resident COMPRESSED downlink: each device lattice-encodes its
+    own reduced shard at the downlink wire width and the all-gather moves
+    packed integer codes + the γ-shards row instead of fp32 (the exchange
+    derives the shared redistribution scale γ_rs from psum'd hints here,
+    where the model axes are known, and hands it to the transport).
 
 Semantics are an exact instance of Alg. 1 with a different (shard-aligned)
-rotation block partition; all transports compute the same aggregate.
+rotation block partition; ``shard_local`` and ``code_allgather`` compute
+the same aggregate exactly, the fused ``reduce_scatter`` up to its
+redistribution quantization (bounded like any downlink encode).
 
 Compression is codec-composable: ``quant_up`` / ``quant_down`` are
 :mod:`repro.compression.codecs` objects resolved per direction. A
@@ -49,7 +54,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compression.codecs import is_lattice_family
-from repro.compression.pipeline import ExchangePipeline
+from repro.compression.pipeline import ExchangePipeline, LatticeWire
 from repro.utils.compat import shard_map
 from repro.utils.tree import fold_in_str
 
@@ -111,19 +116,36 @@ def make_shardlocal_exchange(quant_up, quant_down, mesh,
                                           wire=wire_up)
         srv_rot = pipe.rotate(srv[None], signs)
         qy_own = pipe.snap(codes, srv_rot, gam_up, wire_up)      # rotated
+        # per-client distance to the decode reference (feeds the downlink
+        # hint and, summed over clients, the coded-redistribution scale)
+        h_cl = _psum_norm(jnp.sum(jnp.square(qy_own - srv_rot)), model_axes)
         # client-sum strategy: the pluggable transport decides which bytes
-        # cross the interconnect (fp32 partials, packed codes, or
-        # reduce-scattered snapped chunks)
-        qy_sum = transport.lattice_sum(pipe, wire_up, codes, gam_up,
-                                       srv_rot, qy_own, client_axis,
-                                       client_in_mesh,
-                                       quant_up.code_dtype())
+        # cross the interconnect (fp32 partials, packed codes, or the
+        # scatter-resident coded shards of the fused reduce_scatter path)
+        fused_rs = getattr(transport, "lattice_fused_sum", None)
+        if fused_rs is not None and client_in_mesh:
+            # ‖Σ QYᵢ − n·rot(X_t)‖ ≤ Σᵢ‖QYᵢ − rot(X_t)‖: the psum of the
+            # per-client hints satisfies the wrap bound for the aggregate
+            h_rs = jax.lax.psum(h_cl, client_axis) + 1e-8
+            nrm_rs = jax.lax.psum(
+                _psum_norm(jnp.sum(jnp.square(qy_own)), model_axes),
+                client_axis)
+            wire_rs = LatticeWire(bits=wire_dn.bits, pack=wire_dn.pack)
+            gam_rs = pipe.gammas(h_rs[None], nrm_rs[None], d, wire_rs)
+            k_rs = jax.random.fold_in(jax.random.split(k_dn)[0], kk_cl)
+            qy_sum = fused_rs(pipe, wire_rs, qy_own, srv_rot, gam_rs,
+                              k_rs, client_axis)
+        else:
+            qy_sum = transport.lattice_sum(pipe, wire_up, codes, gam_up,
+                                           srv_rot, qy_own, client_axis,
+                                           client_in_mesh,
+                                           quant_up.code_dtype())
         srv_new_rot = (srv_rot + qy_sum) / denom
 
         # server -> client: encode once (same on every client slice),
         # decode against the client's current model Y — all in rotated
         # space, same reference rule as pipeline.quafl_round
-        h_dn = _psum_norm(jnp.sum(jnp.square(qy_own - srv_rot)), model_axes)
+        h_dn = h_cl
         if client_in_mesh:
             h_dn = jax.lax.pmax(h_dn, client_axis)
         gam_dn = pipe.gammas(2.0 * h_dn[None] + 1e-8,

@@ -46,6 +46,17 @@ index maps (no HBM materialization of the broadcast). Per-message scales
 regular (1, 128) VMEM tile — direct loads from unblocked ``pl.ANY`` refs
 do not lower on real TPUs.
 
+**Per-message levels** (``GroupedLatticeCodec``): each quantizing kernel
+optionally takes ``levels2`` — per-message wrap moduli (powers of two
+<= ``2^bits``) riding as a second lane-aligned (m, 128) row operand, the
+same layout as the γ rows. The kernel reads the modulus from the row
+instead of the static ``2^bits`` constant, so one batched call mixes
+heterogeneous client bit budgets. Sub-byte packing stays at the STATIC
+``bits`` container width: every per-message modulus is <= ``2^bits`` by
+construction, so each code fits the container; honest per-member wire
+bits are the codec's accounting job (`GroupedLatticeCodec.bits_for`),
+not the storage layout's.
+
 On this CPU container everything runs with ``interpret=True``; the
 ``pallas`` backend flips that off on a real TPU.
 """
@@ -174,40 +185,48 @@ def _bits_of(levels: int) -> int:
     return int(levels).bit_length() - 1
 
 
-def _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref, y_ref,
-                   *, scale: float, levels: int, want_rotated: bool,
+def _modulus(l_ref, levels: int):
+    """Wrap/snap modulus: the per-message levels row when one rides along
+    (grouped codecs), else the static 2^bits container."""
+    return float(levels) if l_ref is None else l_ref[0, 0]
+
+
+def _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, l_ref, c_ref,
+                   y_ref, *, scale: float, levels: int, want_rotated: bool,
                    pack: int = 1):
     x = x_ref[0, 0].astype(jnp.float32) * s_ref[0]
     y = jnp.dot(hr_ref[...], x, preferred_element_type=jnp.float32)
     y = jnp.dot(y, hc_ref[...], preferred_element_type=jnp.float32) * scale
     g = g_ref[0, 0]
     q = jnp.floor(y / g + u_ref[0, 0])
-    q = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    q = jnp.mod(q, _modulus(l_ref, levels)).astype(jnp.uint32)
     c_ref[0, 0] = q if pack == 1 else _pack_block(q, pack, _bits_of(levels))
     if want_rotated:
         y_ref[0, 0] = y
 
 
-def _quantize_kernel(y_ref, u_ref, g_ref, c_ref, *, levels: int,
+def _quantize_kernel(y_ref, u_ref, g_ref, l_ref, c_ref, *, levels: int,
                      pack: int = 1):
     g = g_ref[0, 0]
     q = jnp.floor(y_ref[0, 0].astype(jnp.float32) / g + u_ref[0, 0])
-    q = jnp.mod(q, float(levels)).astype(jnp.uint32)
+    q = jnp.mod(q, _modulus(l_ref, levels)).astype(jnp.uint32)
     c_ref[0, 0] = q if pack == 1 else _pack_block(q, pack, _bits_of(levels))
 
 
-def _snap_kernel(c_ref, w_ref, g_ref, o_ref, *, levels: int, pack: int = 1):
+def _snap_kernel(c_ref, w_ref, g_ref, l_ref, o_ref, *, levels: int,
+                 pack: int = 1):
     g = g_ref[0, 0]
     c = c_ref[0, 0]
     if pack > 1:
         c = _unpack_block(c, pack, _bits_of(levels))
     c = c.astype(jnp.float32)
-    q = c + levels * jnp.round((w_ref[0, 0] / g - c) / levels)
+    lv = _modulus(l_ref, levels)
+    q = c + lv * jnp.round((w_ref[0, 0] / g - c) / lv)
     o_ref[0, 0] = q * g
 
 
-def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, o_ref, *,
-                   scale: float, levels: int, pack: int = 1):
+def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, l_ref,
+                   o_ref, *, scale: float, levels: int, pack: int = 1):
     s = s_ref[0]
     w = ref_ref[0, 0].astype(jnp.float32) * s
     w = jnp.dot(hr_ref[...], w, preferred_element_type=jnp.float32)
@@ -217,7 +236,8 @@ def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, o_ref, *,
     if pack > 1:
         c = _unpack_block(c, pack, _bits_of(levels))
     c = c.astype(jnp.float32)
-    q = c + levels * jnp.round((w / g - c) / levels)
+    lv = _modulus(l_ref, levels)
+    q = c + lv * jnp.round((w / g - c) / lv)
     x = jnp.dot(hr_ref[...], q * g, preferred_element_type=jnp.float32)
     x = jnp.dot(x, hc_ref[...], preferred_element_type=jnp.float32) * scale
     o_ref[0, 0] = x * s
@@ -226,6 +246,14 @@ def _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, o_ref, *,
 # ---------------------------------------------------------------------------
 # jit'd wrappers — all take (m, d_pad) message batches + (d_pad,) signs
 # ---------------------------------------------------------------------------
+
+def _levels_operand(levels2, m: int):
+    """(specs, operands) for an optional per-message levels row — the same
+    lane-aligned (m, LANE) layout the γ rows use."""
+    if levels2 is None:
+        return [], []
+    return ([pl.BlockSpec((1, LANE), lambda i, j: (i, 0))],
+            [_gamma_rows(levels2, m)])
 
 @partial(jax.jit, static_argnames=("block", "inverse", "interpret"))
 def fused_rotate(x2: jnp.ndarray, signs: jnp.ndarray, *,
@@ -256,15 +284,17 @@ def fused_rotate(x2: jnp.ndarray, signs: jnp.ndarray, *,
 def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
                  gammas: jnp.ndarray, *, bits: int = 8,
                  block: int = DEFAULT_BLOCK, want_rotated: bool = False,
-                 interpret: bool = True, pack: int = 1):
+                 interpret: bool = True, pack: int = 1, levels2=None):
     """Rotate + stochastic-round + wrap in one pass.
 
     x2: (m, d_pad) padded messages; u2: U(0,1) rounding noise, same shape;
-    gammas: (m,) per-message scales. Returns codes (m, d_pad) uint32 — or,
-    with ``pack = 8 // bits`` > 1, sub-byte-packed codes (m, d_pad // pack)
-    uint8 combined inside the kernel — or (rotated, codes) when
-    ``want_rotated`` (one extra VMEM->HBM store per block instead of a
-    second full rotation pass later).
+    gammas: (m,) per-message scales; levels2: optional (m,) per-message
+    wrap moduli (powers of two <= 2^bits) riding as a levels row. Returns
+    codes (m, d_pad) uint32 — or, with ``pack = 8 // bits`` > 1,
+    sub-byte-packed codes (m, d_pad // pack) uint8 combined inside the
+    kernel — or (rotated, codes) when ``want_rotated`` (one extra
+    VMEM->HBM store per block instead of a second full rotation pass
+    later).
     """
     m, d_pad = x2.shape
     b, _, r, c, nb = block_geometry(d_pad, block)
@@ -278,11 +308,14 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
         out_shape.append(jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32))
         out_specs.append(pl.BlockSpec((1, 1, r, c),
                                       lambda i, j: (i, j, 0, 0)))
+    l_specs, l_ops = _levels_operand(levels2, m)
+    has_levels = levels2 is not None
 
-    def body(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref,
-             *maybe_y):
-        _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, c_ref,
-                       maybe_y[0] if maybe_y else None,
+    def body(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, *rest):
+        l_ref = rest[0] if has_levels else None
+        outs = rest[1:] if has_levels else rest
+        _encode_kernel(x_ref, s_ref, u_ref, hr_ref, hc_ref, g_ref, l_ref,
+                       outs[0], outs[1] if want_rotated else None,
                        scale=1.0 / np.sqrt(b), levels=1 << bits,
                        want_rotated=want_rotated, pack=pack)
 
@@ -296,12 +329,13 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
             pl.BlockSpec((r, r), lambda i, j: (0, 0)),
             pl.BlockSpec((c, c), lambda i, j: (0, 0)),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
-        ],
+        ] + l_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(_blk(x2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
-      _blk(u2.astype(jnp.float32), nb, r, c), hr, hc, _gamma_rows(gammas, m))
+      _blk(u2.astype(jnp.float32), nb, r, c), hr, hc, _gamma_rows(gammas, m),
+      *l_ops)
     codes = res[0].reshape(m, d_pad // pack)
     if want_rotated:
         return res[1].reshape(m, d_pad), codes
@@ -311,46 +345,58 @@ def fused_encode(x2: jnp.ndarray, signs: jnp.ndarray, u2: jnp.ndarray,
 @partial(jax.jit, static_argnames=("bits", "block", "interpret", "pack"))
 def quantize_codes(y2: jnp.ndarray, u2: jnp.ndarray, gammas: jnp.ndarray, *,
                    bits: int = 8, block: int = DEFAULT_BLOCK,
-                   interpret: bool = True, pack: int = 1) -> jnp.ndarray:
+                   interpret: bool = True, pack: int = 1,
+                   levels2=None) -> jnp.ndarray:
     """Stochastic-round + wrap of already-rotated coordinates.
 
     y2: (m, d_pad) ROTATED messages; u2: U(0,1) rounding noise, same shape;
-    gammas: (m,) per-message scales. Elementwise — no Hadamard factors touch
-    the MXU, so encoding a cached rotated vector costs no rotation pass.
-    Bit-identical to the quantize half of ``fused_encode`` (``pack``
-    included).
+    gammas: (m,) per-message scales; levels2: optional (m,) per-message wrap
+    moduli. Elementwise — no Hadamard factors touch the MXU, so encoding a
+    cached rotated vector costs no rotation pass. Bit-identical to the
+    quantize half of ``fused_encode`` (``pack`` included).
     """
     m, d_pad = y2.shape
     _, _, r, c, nb = block_geometry(d_pad, block)
     _check_pack(pack, bits, r)
     rp = r // pack
     code_dt = jnp.uint8 if pack > 1 else jnp.uint32
+    l_specs, l_ops = _levels_operand(levels2, m)
+    has_levels = levels2 is not None
+
+    def body(y_ref, u_ref, g_ref, *rest):
+        _quantize_kernel(y_ref, u_ref, g_ref,
+                         rest[0] if has_levels else None, rest[-1],
+                         levels=1 << bits, pack=pack)
+
     out = pl.pallas_call(
-        partial(_quantize_kernel, levels=1 << bits, pack=pack),
+        body,
         grid=(m, nb),
         in_specs=[
             pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
-        ],
+        ] + l_specs,
         out_specs=pl.BlockSpec((1, 1, rp, c), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb, rp, c), code_dt),
         interpret=interpret,
     )(_blk(y2.astype(jnp.float32), nb, r, c),
-      _blk(u2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
+      _blk(u2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m),
+      *l_ops)
     return out.reshape(m, d_pad // pack)
 
 
 @partial(jax.jit, static_argnames=("bits", "block", "interpret", "pack"))
 def snap_codes(codes2: jnp.ndarray, wrot2: jnp.ndarray, gammas: jnp.ndarray,
                *, bits: int = 8, block: int = DEFAULT_BLOCK,
-               interpret: bool = True, pack: int = 1) -> jnp.ndarray:
-    """Positional snap in rotated space: gamma * (c + 2^b round((w/g-c)/2^b)).
+               interpret: bool = True, pack: int = 1,
+               levels2=None) -> jnp.ndarray:
+    """Positional snap in rotated space: gamma * (c + L round((w/g-c)/L)).
 
     codes2 (mc, d_pad // pack) and wrot2 (mw, d_pad) broadcast along the
-    message axis (mc or mw may be 1); gammas has the codes' batch size.
-    With ``pack > 1`` the codes arrive sub-byte packed and are unpacked
-    inline, inside the kernel.
+    message axis (mc or mw may be 1); gammas (and the optional per-message
+    ``levels2`` moduli) have the codes' batch size. With ``pack > 1`` the
+    codes arrive sub-byte packed and are unpacked inline, inside the
+    kernel.
     """
     mc, d_padp = codes2.shape
     d_pad = d_padp * pack
@@ -360,19 +406,28 @@ def snap_codes(codes2: jnp.ndarray, wrot2: jnp.ndarray, gammas: jnp.ndarray,
     _check_pack(pack, bits, r)
     rp = r // pack
     code_dt = jnp.uint8 if pack > 1 else jnp.uint32
+    l_specs, l_ops = _levels_operand(levels2, m)
+    has_levels = levels2 is not None
+
+    def body(c_ref, w_ref, g_ref, *rest):
+        _snap_kernel(c_ref, w_ref, g_ref,
+                     rest[0] if has_levels else None, rest[-1],
+                     levels=1 << bits, pack=pack)
+
     out = pl.pallas_call(
-        partial(_snap_kernel, levels=1 << bits, pack=pack),
+        body,
         grid=(m, nb),
         in_specs=[
             _row_spec(mc, rp, c),
             _row_spec(mw, r, c),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
-        ],
+        ] + l_specs,
         out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
         interpret=interpret,
     )(_blk(codes2.astype(code_dt), nb, rp, c),
-      _blk(wrot2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m))
+      _blk(wrot2.astype(jnp.float32), nb, r, c), _gamma_rows(gammas, m),
+      *l_ops)
     return out.reshape(m, d_pad)
 
 
@@ -380,13 +435,15 @@ def snap_codes(codes2: jnp.ndarray, wrot2: jnp.ndarray, gammas: jnp.ndarray,
 def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
                  gammas: jnp.ndarray, *, bits: int = 8,
                  block: int = DEFAULT_BLOCK,
-                 interpret: bool = True, pack: int = 1) -> jnp.ndarray:
+                 interpret: bool = True, pack: int = 1,
+                 levels2=None) -> jnp.ndarray:
     """Full positional decode: rotate ref + snap + inverse rotate, fused.
 
     codes2 (mc, d_pad // pack) vs references ref2 (mr, d_pad) in ORIGINAL
-    space; broadcasts along the message axis. Packed codes (``pack > 1``)
-    are unpacked inline. Returns (max(mc, mr), d_pad) fp32 in original
-    coordinates (caller unpads with [:, :d]).
+    space; broadcasts along the message axis; ``levels2`` optionally
+    carries per-message snap moduli (the codes' batch size). Packed codes
+    (``pack > 1``) are unpacked inline. Returns (max(mc, mr), d_pad) fp32
+    in original coordinates (caller unpads with [:, :d]).
     """
     mc = codes2.shape[0]
     mr, d_pad = ref2.shape
@@ -396,9 +453,16 @@ def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
     rp = r // pack
     code_dt = jnp.uint8 if pack > 1 else jnp.uint32
     hr, hc = _had(r, c)
+    l_specs, l_ops = _levels_operand(levels2, m)
+    has_levels = levels2 is not None
+
+    def body(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref, *rest):
+        _decode_kernel(c_ref, ref_ref, s_ref, hr_ref, hc_ref, g_ref,
+                       rest[0] if has_levels else None, rest[-1],
+                       scale=1.0 / np.sqrt(b), levels=1 << bits, pack=pack)
+
     out = pl.pallas_call(
-        partial(_decode_kernel, scale=1.0 / np.sqrt(b), levels=1 << bits,
-                pack=pack),
+        body,
         grid=(m, nb),
         in_specs=[
             _row_spec(mc, rp, c),
@@ -407,11 +471,11 @@ def fused_decode(codes2: jnp.ndarray, ref2: jnp.ndarray, signs: jnp.ndarray,
             pl.BlockSpec((r, r), lambda i, j: (0, 0)),
             pl.BlockSpec((c, c), lambda i, j: (0, 0)),
             pl.BlockSpec((1, LANE), lambda i, j: (i, 0)),
-        ],
+        ] + l_specs,
         out_specs=pl.BlockSpec((1, 1, r, c), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, nb, r, c), jnp.float32),
         interpret=interpret,
     )(_blk(codes2.astype(code_dt), nb, rp, c),
       _blk(ref2.astype(jnp.float32), nb, r, c), signs.reshape(nb, r, c),
-      hr, hc, _gamma_rows(gammas, m))
+      hr, hc, _gamma_rows(gammas, m), *l_ops)
     return out.reshape(m, d_pad)

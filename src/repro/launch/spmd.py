@@ -22,7 +22,10 @@ Mapping notes:
     lasts ``swt + sit`` simulated seconds; H_i is drawn inside the step.
   * bit accounting is QuAFL's: s quantized uplink messages plus ONE
     downlink broadcast Enc(X_t) per round (``tree_bits`` over the param
-    tree).
+    tree), plus the transport's gathered side-channel / coded-re-gather
+    payload (``Transport.extra_bits_down`` — the (n-1) extra γ/levels f32
+    rows a code all-gather moves, or the scatter-resident coded
+    redistribution of the fused reduce_scatter) charged into ``bits_down``.
 """
 from __future__ import annotations
 
@@ -97,6 +100,18 @@ class SpmdAlgorithm:
                 quantized=quantized, remat=self.remat)
         self._bits_up_msg = tree_bits(self.codec_up, self.template)
         self._bits_down_msg = tree_bits(self.codec_down, self.template)
+        # the transport's redistribution payload (gathered γ/levels rows,
+        # or the fused reduce_scatter's coded shard re-gather) is downlink
+        # traffic the per-message codec math cannot see — charge it per
+        # leaf at the mesh's slot count (0 on the (1,1) CI mesh)
+        from repro.compression.transports import transport_for_mode
+        tr = transport_for_mode(self.transport or self.fed.transport)
+        self._extra_bits_down = 0
+        if tr is not None and hasattr(tr, "extra_bits_down"):
+            self._extra_bits_down = sum(
+                tr.extra_bits_down(self.codec_up, self.codec_down,
+                                   int(v.size), self.n_slots)
+                for v in jax.tree_util.tree_leaves(self.template))
 
     # ------------------------------------------------------------------
     def init(self, params0) -> SpmdState:
@@ -126,9 +141,11 @@ class SpmdAlgorithm:
         train, m = self._step(state.train, {"tokens": toks},
                               jax.random.key_data(k_r))
 
-        # QuAFL bit accounting: s uplink messages, one downlink broadcast
+        # QuAFL bit accounting: s uplink messages, one downlink broadcast,
+        # plus the transport's gathered side-channel rows / coded re-gather
         bits_up = jnp.asarray(n * self._bits_up_msg, jnp.float32)
-        bits_down = jnp.asarray(self._bits_down_msg, jnp.float32)
+        bits_down = jnp.asarray(self._bits_down_msg
+                                + self._extra_bits_down, jnp.float32)
         dt = fed.swt + fed.sit
         new_time = state.sim_time + dt
         # schema quant_err: RMS decode error relative to the server norm

@@ -219,6 +219,51 @@ def test_analyze_jaxpr_reports_tracked_ops():
     assert op_counts(jax.make_jaxpr(f)(jnp.ones(3)))["convert_element_type"] == 2
 
 
+def test_rs_transport_audit_clean_and_byte_gate_trips():
+    """The fused shard_local_rs exchange, traced on an abstract (4, 2)
+    mesh, moves integer codes + scalar γ rows over its all-gather and only
+    scalar hints over psum — and the byte budget FAILS the fixture where
+    the fp32 aggregate rides the wire instead."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.analysis.lint import rs_transport_audit
+    from repro.analysis.opbudget import check_collective_bytes
+    from repro.compression.codecs import resolve_codec
+    from repro.compression.transports import transport_for_mode
+    from repro.configs.base import FedConfig
+    from repro.core.exchange_local import make_shardlocal_exchange
+
+    rep = rs_transport_audit()
+    assert rep["violations"] == []
+    ops = rep["ops"]
+    # the reducing phase is the ONE fp32-sized collective; the re-gather
+    # is coded (ints) with a scalars-only float side channel
+    assert ops["reduce_scatter_fbytes"] == (1 << 16) * 4
+    assert 0 < ops["all_gather_ibytes"] <= (1 << 16)
+    assert ops["all_gather_fbytes"] <= 64 * 4
+    assert ops["psum_fbytes"] <= 4096
+
+    # regression fixture: fp32 psum transport under the same budget
+    n, d = 4, 1 << 16
+    mesh = AbstractMesh((("data", n), ("model", 2)))
+    fed = FedConfig(n_clients=n, s=n, bits=8,
+                    codec_up="lattice_packed:bits=4",
+                    codec_down="lattice_packed:bits=4")
+    up = resolve_codec(None, fed, direction="up")
+    dn = resolve_codec(None, fed, direction="down")
+    ex = make_shardlocal_exchange(
+        up, dn, mesh, {"w": P()}, {"w": P("data")}, "data", n,
+        transport=transport_for_mode("shard_local"))
+    closed = jax.make_jaxpr(ex)(
+        {"w": jax.ShapeDtypeStruct((d,), jnp.float32)},
+        {"w": jax.ShapeDtypeStruct((n, d), jnp.float32)},
+        {"w": jax.ShapeDtypeStruct((n, d), jnp.float32)},
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    viols = check_collective_bytes(closed, "fixture", {
+        "all_gather_fbytes": 64 * n, "psum_fbytes": 4096})
+    assert [v.rule for v in viols] == ["collective-bytes"]
+    assert "psum_fbytes" in viols[0].detail
+
+
 # ---------------------------------------------------------------------------
 # AST rule fixtures
 # ---------------------------------------------------------------------------
