@@ -1,18 +1,31 @@
 """Static analysis for traced federated rounds — jaxpr + AST invariants.
 
-Two halves (see ``README.md`` § Static analysis):
+Three layers (see ``README.md`` § Static analysis):
 
 * jaxpr analyzers (:mod:`repro.analysis.jaxpr`, ``opbudget``, ``donation``,
   ``sentinel``) — walk the closed jaxpr / lowered HLO of every registry
   algorithm's round, via ``RoundEngine.traced_round()`` / ``traced_chunk()``.
+* dataflow analyzers on the worklist engine (:mod:`repro.analysis.flow`) —
+  the wire-truth taint audit (:mod:`repro.analysis.wire`), γ-overflow
+  interval analysis (:mod:`repro.analysis.intervals`) and SPMD divergence
+  detection (:mod:`repro.analysis.divergence`).
 * AST repo rules (:mod:`repro.analysis.astlint`) — source-level checks over
   ``src/repro/``.
 
 ``python -m repro.analysis.lint`` runs everything over the full
-algorithm × codec matrix and writes ``ANALYSIS.json``. Keep this package
-__init__ import-light: ``compression.pipeline`` imports ``opbudget`` at
-instance-construction time, so pulling registries in here would be a cycle.
+algorithm × codec (and codec × transport) matrix and writes
+``ANALYSIS.json``. Keep this package __init__ import-light:
+``compression.pipeline`` imports ``opbudget`` at instance-construction
+time, so pulling registries in here would be a cycle.
 """
+from repro.analysis.divergence import (DivergenceDomain,  # noqa: F401
+                                       check_divergence)
+from repro.analysis.flow import (FlowContext, FlowDomain,  # noqa: F401
+                                 FlowResult, JoinAllDomain, analyze_flow)
+from repro.analysis.intervals import (IntervalDomain,  # noqa: F401
+                                      check_encode_intervals,
+                                      check_gamma_window,
+                                      check_rs_gamma_window, interval_of)
 from repro.analysis.jaxpr import (Violation, analyze_jaxpr,  # noqa: F401
                                   check_host_callbacks,
                                   check_key_discipline, check_wide_dtypes,
@@ -20,4 +33,7 @@ from repro.analysis.jaxpr import (Violation, analyze_jaxpr,  # noqa: F401
 from repro.analysis.opbudget import (OpBudget,  # noqa: F401
                                      check_rotation_budget,
                                      rotation_budget)
+from repro.analysis.provenance import wire_mark  # noqa: F401
 from repro.analysis.sentinel import RecompileSentinel  # noqa: F401
+from repro.analysis.wire import (WireTaintDomain,  # noqa: F401
+                                 check_wire_truth, collect_wire_facts)

@@ -1,0 +1,402 @@
+"""γ-overflow interval analysis over the fused encode path.
+
+Lemma 3.1's wrap condition is the repo's central numerical contract: a
+snapped code recovers the right lattice point only while the decode
+reference stays within half a wrap window (``levels·γ/2``) of the encoded
+vector. The γ derivation (``wrap_gamma`` + fp32 floor in
+``ExchangePipeline.gammas``) is *designed* to guarantee that, but nothing
+previously checked the shipped code against the design — a wrong safety
+factor, a levels row exceeding the declared modulus, or a γ taken from a
+stale hint would silently corrupt snapped codes.
+
+This module proves the contract by abstract interpretation with intervals
+(:class:`IntervalDomain` on the flow engine), on the SAME traced
+derivations the exchange runs:
+
+* :func:`check_encode_intervals` — traces ``pipeline.quantize`` (the
+  rotate→scale→round→wrap path, pre-packing) and proves the emitted codes
+  cannot exceed the codec's DECLARED per-message moduli. ``jnp.mod`` is
+  summarised precisely through a ``remainder`` call override, so the codes
+  interval is [0, L_traced]; a pipeline quantizing at 8 bits under a
+  4-bit declaration fails here.
+* :func:`check_gamma_window` — traces the wrap margin
+  ``L/2 − (coord_bound(dist)/γ + 1)`` through the real ``gammas``
+  derivation over a ladder of hint bands ``[h, 2h]`` spanning 2^-20..2^20,
+  with the encoded distance bounded by the band's own hint (the protocol
+  contract: hints upper-bound ‖Y−X‖). A positive lower bound on every
+  band proves no wrap overflow at any scale; with band ratio 2 the proof
+  obligation is ``L/2 − L/safety − 1 > 0`` — true for every registry wire
+  (safety 8, bits ≥ 2), false e.g. for safety < 2.3.
+* :func:`check_rs_gamma_window` — the same margin proof through
+  :func:`repro.core.exchange_local.rs_gamma`, whose triangle-inequality
+  hint sum (``h_sum = Σᵢ‖QYᵢ − rot(X_t)‖ ≥ ‖ΣQYᵢ − n·rot(X_t)‖``) bounds
+  the scatter-resident aggregate; bands are ``[n·h, 2n·h]``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.analysis.flow import FlowDomain, analyze_flow
+from repro.analysis.jaxpr import Violation
+
+Interval = Tuple[float, float]
+
+TOP: Interval = (-math.inf, math.inf)
+
+# hint ladder: powers of two, each analyzed as the band [h, 2h] so
+# consecutive bands tile every positive hint scale
+LADDER_LO, LADDER_HI = -20, 20
+
+
+def _iv(lo: float, hi: float) -> Interval:
+    return (float(lo), float(hi))
+
+
+def _mul_iv(a: Interval, b: Interval) -> Interval:
+    def prod(x, y):
+        if x == 0.0 or y == 0.0:  # avoid 0 * inf -> nan
+            return 0.0
+        return x * y
+    ps = [prod(a[0], b[0]), prod(a[0], b[1]), prod(a[1], b[0]),
+          prod(a[1], b[1])]
+    return _iv(min(ps), max(ps))
+
+
+def _div_iv(a: Interval, b: Interval) -> Interval:
+    if b[0] <= 0.0 <= b[1]:
+        return TOP
+    def quot(x, y):
+        q = x / y if not (math.isinf(x) and math.isinf(y)) else 0.0
+        return 0.0 if math.isnan(q) else q
+    qs = [quot(a[0], b[0]), quot(a[0], b[1]), quot(a[1], b[0]),
+          quot(a[1], b[1])]
+    return _iv(min(qs), max(qs))
+
+
+def _monotone(f, a: Interval) -> Interval:
+    return _iv(f(a[0]), f(a[1]))
+
+
+def _aval_size(aval) -> int:
+    shape = getattr(aval, "shape", ())
+    return int(np.prod(shape)) if shape else 1
+
+
+class IntervalDomain(FlowDomain):
+    """(lo, hi) bounds per value; arrays carry one interval over all
+    elements (sound: every element lies inside)."""
+
+    def top(self, aval) -> Interval:
+        return TOP
+
+    def join(self, a: Interval, b: Interval) -> Interval:
+        return _iv(min(a[0], b[0]), max(a[1], b[1]))
+
+    def literal(self, lit) -> Interval:
+        return self.const(lit.aval, lit.val)
+
+    def const(self, aval, val) -> Interval:
+        try:
+            arr = np.asarray(val)
+            if arr.dtype == bool:
+                return _iv(float(arr.min()), float(arr.max()))
+            if not np.issubdtype(arr.dtype, np.number):
+                return TOP
+            return _iv(float(arr.min()), float(arr.max()))
+        except (TypeError, ValueError):
+            return TOP
+
+    def call_override(self, eqn, closed_sub, ins) -> List[Interval] | None:
+        # jnp.mod lowers to pjit[name=remainder] around rem + sign-fix
+        # select_n; the composite's mathematical result is [0, divisor)
+        # when the divisor is positive — far tighter than its body.
+        if eqn.params.get("name") == "remainder" and len(ins) == 2:
+            div = ins[1]
+            if div[0] > 0.0:
+                return [_iv(0.0, div[1])]
+        return None
+
+    def transfer(self, eqn, ins: List[Interval]) -> List[Interval]:
+        rule = _RULES.get(eqn.primitive.name)
+        if rule is None:
+            return [TOP for _ in eqn.outvars]
+        out = rule(eqn, ins)
+        return [out for _ in eqn.outvars]
+
+
+def _first(eqn, ins):
+    return ins[0]
+
+
+def _join_all(eqn, ins):
+    out = ins[0]
+    for v in ins[1:]:
+        out = _iv(min(out[0], v[0]), max(out[1], v[1]))
+    return out
+
+
+def _bool01(eqn, ins):
+    return _iv(0.0, 1.0)
+
+
+def _convert(eqn, ins):
+    a = ins[0]
+    dtype = np.dtype(eqn.outvars[0].aval.dtype)
+    if np.issubdtype(dtype, np.integer) and math.isfinite(a[0]) \
+            and math.isfinite(a[1]):
+        # conversion truncates toward zero: always within [floor, ceil]
+        return _iv(math.floor(a[0]), math.ceil(a[1]))
+    return a
+
+
+def _clamp(eqn, ins):
+    lo_b, x, hi_b = ins
+    lo = max(lo_b[0], min(x[0], hi_b[1]))
+    hi = min(hi_b[1], max(x[1], lo_b[0]))
+    return _iv(lo, hi)
+
+
+def _abs_iv(eqn, ins):
+    a = ins[0]
+    if a[0] <= 0.0 <= a[1]:
+        return _iv(0.0, max(-a[0], a[1]))
+    lo, hi = abs(a[0]), abs(a[1])
+    return _iv(min(lo, hi), max(lo, hi))
+
+
+def _sqrt_iv(eqn, ins):
+    a = ins[0]
+    return _iv(math.sqrt(max(a[0], 0.0)),
+               math.sqrt(a[1]) if a[1] >= 0.0 else 0.0)
+
+
+def _rsqrt_iv(eqn, ins):
+    a = ins[0]
+    if a[0] <= 0.0:
+        return TOP
+    return _iv(1.0 / math.sqrt(a[1]), 1.0 / math.sqrt(a[0]))
+
+
+def _log_iv(eqn, ins):
+    a = ins[0]
+    hi = math.log(a[1]) if a[1] > 0.0 else -math.inf
+    lo = math.log(a[0]) if a[0] > 0.0 else -math.inf
+    return _iv(lo, hi)
+
+
+def _exp_iv(eqn, ins):
+    return _monotone(lambda v: math.exp(min(v, 700.0)), ins[0])
+
+
+def _sign_iv(eqn, ins):
+    a = ins[0]
+    return _iv(-1.0 if a[0] < 0.0 else 0.0 if a[0] == 0.0 else 1.0,
+               1.0 if a[1] > 0.0 else 0.0 if a[1] == 0.0 else -1.0)
+
+
+def _ipow(eqn, ins):
+    a, y = ins[0], int(eqn.params["y"])
+    if y < 0:
+        return _div_iv(_iv(1.0, 1.0), _ipow_pos(a, -y))
+    return _ipow_pos(a, y)
+
+
+def _ipow_pos(a: Interval, y: int) -> Interval:
+    if y % 2 == 1:
+        return _iv(a[0] ** y, a[1] ** y)
+    lo = 0.0 if a[0] <= 0.0 <= a[1] else min(abs(a[0]), abs(a[1])) ** y
+    return _iv(lo, max(abs(a[0]), abs(a[1])) ** y)
+
+
+def _rem_iv(eqn, ins):
+    num, div = ins
+    if div[0] > 0.0:
+        if num[0] >= 0.0:  # lax.rem takes the dividend's sign
+            return _iv(0.0, div[1])
+        return _iv(-div[1], div[1])
+    return TOP
+
+
+def _reduce_sum(eqn, ins):
+    n = _aval_size(eqn.invars[0].aval) // max(_aval_size(eqn.outvars[0].aval), 1)
+    return _mul_iv(ins[0], _iv(n, n))
+
+
+def _dot(eqn, ins):
+    ((lhs_c, _), _) = eqn.params["dimension_numbers"]
+    shape = eqn.invars[0].aval.shape
+    n = 1
+    for dim in lhs_c:
+        n *= int(shape[dim])
+    return _mul_iv(_mul_iv(ins[0], ins[1]), _iv(n, n))
+
+
+def _iota(eqn, ins):
+    shape = eqn.outvars[0].aval.shape
+    dim = eqn.params.get("dimension", 0)
+    hi = int(shape[dim]) - 1 if shape else 0
+    return _iv(0.0, max(hi, 0))
+
+
+def _pad_iv(eqn, ins):
+    return _join_all(eqn, ins[:2])
+
+
+_RULES = {
+    # structural / value-preserving
+    "reshape": _first, "transpose": _first, "squeeze": _first,
+    "broadcast_in_dim": _first, "slice": _first, "dynamic_slice": _first,
+    "rev": _first, "copy": _first, "gather": _first, "stop_gradient": _first,
+    "reduce_precision": _first, "expand_dims": _first,
+    "concatenate": _join_all, "pad": _pad_iv,
+    # select_n joins its cases (the predicate operand is excluded)
+    "select_n": lambda eqn, ins: _join_all(eqn, ins[1:]),
+    # arithmetic
+    "add": lambda eqn, ins: _iv(ins[0][0] + ins[1][0], ins[0][1] + ins[1][1]),
+    "sub": lambda eqn, ins: _iv(ins[0][0] - ins[1][1], ins[0][1] - ins[1][0]),
+    "mul": lambda eqn, ins: _mul_iv(ins[0], ins[1]),
+    "div": lambda eqn, ins: _div_iv(ins[0], ins[1]),
+    "neg": lambda eqn, ins: _iv(-ins[0][1], -ins[0][0]),
+    "abs": _abs_iv, "sign": _sign_iv,
+    "max": lambda eqn, ins: _iv(max(ins[0][0], ins[1][0]),
+                                max(ins[0][1], ins[1][1])),
+    "min": lambda eqn, ins: _iv(min(ins[0][0], ins[1][0]),
+                                min(ins[0][1], ins[1][1])),
+    "clamp": _clamp,
+    "sqrt": _sqrt_iv, "rsqrt": _rsqrt_iv, "exp": _exp_iv, "log": _log_iv,
+    "integer_pow": _ipow, "rem": _rem_iv,
+    "convert_element_type": _convert,
+    "tanh": lambda eqn, ins: _iv(-1.0, 1.0),
+    "sin": lambda eqn, ins: _iv(-1.0, 1.0),
+    "cos": lambda eqn, ins: _iv(-1.0, 1.0),
+    "logistic": lambda eqn, ins: _iv(0.0, 1.0),
+    # predicates / boolean algebra
+    "lt": _bool01, "le": _bool01, "gt": _bool01, "ge": _bool01,
+    "eq": _bool01, "ne": _bool01, "and": _bool01, "or": _bool01,
+    "xor": _bool01, "not": _bool01, "is_finite": _bool01,
+    "reduce_and": _bool01, "reduce_or": _bool01,
+    # reductions / contractions
+    "reduce_sum": _reduce_sum, "cumsum": _reduce_sum,
+    "reduce_max": _first, "reduce_min": _first, "cummax": _first,
+    "cummin": _first, "dot_general": _dot, "iota": _iota,
+    "argmax": _iota, "argmin": _iota,
+}
+
+# floor/ceil of an infinite bound: keep the infinite side as-is
+_RULES["floor"] = lambda eqn, ins: _iv(
+    math.floor(ins[0][0]) if math.isfinite(ins[0][0]) else ins[0][0],
+    math.floor(ins[0][1]) if math.isfinite(ins[0][1]) else ins[0][1])
+_RULES["ceil"] = lambda eqn, ins: _iv(
+    math.ceil(ins[0][0]) if math.isfinite(ins[0][0]) else ins[0][0],
+    math.ceil(ins[0][1]) if math.isfinite(ins[0][1]) else ins[0][1])
+_RULES["round"] = lambda eqn, ins: _iv(
+    float(np.rint(ins[0][0])) if math.isfinite(ins[0][0]) else ins[0][0],
+    float(np.rint(ins[0][1])) if math.isfinite(ins[0][1]) else ins[0][1])
+
+
+def interval_of(fn, seeds: List[Interval], *example_args) -> List[Interval]:
+    """Trace ``fn`` on the example arguments and bound its outputs given
+    per-argument input intervals."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*example_args)
+    res = analyze_flow(closed, IntervalDomain(), inputs=list(seeds))
+    return res.out_vals
+
+
+def _ladder():
+    return [2.0 ** k for k in range(LADDER_LO, LADDER_HI + 1)]
+
+
+def check_encode_intervals(pipe, wire, d: int, declared_moduli,
+                           where: str) -> List[Violation]:
+    """Prove the traced quantize path cannot emit codes past the codec's
+    declared moduli (pre-packing: sub-byte packing is a pure relayout of
+    in-range codes)."""
+    import jax.numpy as jnp
+    from repro.compression.pipeline import LatticeWire
+    from repro.compression.rotation import pad_len
+
+    if not declared_moduli:
+        return []
+    out: List[Violation] = []
+    d_pad = pad_len(d, pipe.block)
+    unpacked = LatticeWire(bits=wire.bits, pack=1, levels=wire.levels)
+    fn = lambda y, u, g: pipe.quantize(y, u, g, unpacked)  # noqa: E731
+    ex = (jnp.zeros((2, d_pad)), jnp.zeros((2, d_pad)), jnp.zeros((2,)))
+    # wrap is scale-free: any finite coords / positive γ band
+    seeds = [_iv(-1e30, 1e30), _iv(0.0, 1.0), _iv(1e-12, 1e30)]
+    codes = interval_of(fn, seeds, *ex)[0]
+    l_max = float(max(declared_moduli))
+    if codes[0] < 0.0 or codes[1] > l_max:
+        out.append(Violation(
+            "gamma-overflow", where,
+            f"traced codes interval [{codes[0]:g}, {codes[1]:g}] escapes "
+            f"the declared moduli (max {l_max:g}): wire values can wrap "
+            f"past the charged width"))
+    return out
+
+
+def _window_margin_violations(margin_fn, example, bands, where: str,
+                              what: str) -> List[Violation]:
+    out = []
+    for h in bands:
+        # hint band [h, 2h]; the true distance is protocol-bounded by the
+        # hint, so dist ∈ [0, 2h]; the fp32-floor norm is free
+        seeds = [_iv(h, 2.0 * h), _iv(0.0, 2.0 * h), _iv(0.0, 1e30)]
+        m = interval_of(margin_fn, seeds, *example)[0]
+        if not (m[0] > 0.0):
+            out.append(Violation(
+                "gamma-overflow", where,
+                f"{what}: wrap margin lower bound {m[0]:g} <= 0 on hint "
+                f"band [{h:g}, {2 * h:g}] — snapped codes can wrap past "
+                f"the window"))
+            break  # one band suffices; the derivation is scale-uniform
+    return out
+
+
+def check_gamma_window(pipe, wire, d: int, where: str) -> List[Violation]:
+    """Prove Lemma 3.1's wrap condition through the pipeline's own γ
+    derivation, at every hint scale."""
+    import jax.numpy as jnp
+    from repro.compression.pipeline import coord_bound
+    from repro.compression.rotation import pad_len
+
+    d_pad = pad_len(d, pipe.block)
+
+    def margin(hint, dist, xnorm):
+        g = pipe.gammas(hint, xnorm, d, wire)
+        levels = (jnp.asarray(wire.levels, jnp.float32)
+                  if wire.levels is not None else 2.0 ** wire.bits)
+        return levels / 2.0 - (coord_bound(dist, d_pad) / g + 1.0)
+
+    ex = (jnp.ones(()), jnp.ones(()), jnp.ones(()))
+    return _window_margin_violations(margin, ex, _ladder(), where,
+                                     f"bits={wire.bits} safety={pipe.safety}")
+
+
+def check_rs_gamma_window(pipe, wire_dn, d: int, n_clients: int,
+                          where: str) -> List[Violation]:
+    """The same wrap proof for the reduce-scatter aggregate downlink: γ_rs
+    comes from the triangle-inequality hint sum over ``n_clients``, so the
+    hint bands are the summed scale ``[n·h, 2n·h]``."""
+    import jax.numpy as jnp
+    from repro.compression.pipeline import coord_bound
+    from repro.compression.rotation import pad_len
+    from repro.core.exchange_local import rs_gamma
+
+    d_pad = pad_len(d, pipe.block)
+
+    def margin(h_sum, dist, nrm):
+        g, wire_rs = rs_gamma(pipe, wire_dn, h_sum, nrm, d)
+        return (2.0 ** wire_rs.bits) / 2.0 \
+            - (coord_bound(dist, d_pad) / g[0] + 1.0)
+
+    ex = (jnp.ones(()), jnp.ones(()), jnp.ones(()))
+    bands = [n_clients * h for h in _ladder()]
+    return _window_margin_violations(
+        margin, ex, bands, where,
+        f"rs bits={wire_dn.bits} n={n_clients} safety={pipe.safety}")

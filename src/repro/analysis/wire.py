@@ -1,0 +1,276 @@
+"""Wire-truth audit: traced message payloads vs. declared wire formats.
+
+The repo's reproduction claim is its ``bits_up``/``bits_down`` accounting,
+so this analyzer makes the accounting *checkable*: every codec exports a
+machine-readable :class:`repro.compression.codecs.WireDecl` and every
+message-creation site carries a ``wire_mark`` (see
+``repro.analysis.provenance``). A taint dataflow over the traced round
+(:class:`WireTaintDomain` on the flow engine) then:
+
+* locates every mark and cross-checks the traced value against the
+  declared part — container bit-width, element count, int/float kind. An
+  fp32 value marked as a 4-bit-charged payload is a violation here, not a
+  silently wrong BENCH row;
+* rejects traced message parts the declaration does not charge (an
+  uncharged side-channel row, e.g. a levels row on a codec that never
+  declared one);
+* checks declaration self-consistency (``decl.message_bits`` must equal
+  the codec's ``message_bits(d)``; a payload may not charge sub-16-bit
+  coords while declaring a >= 32-bit container);
+* on distributed traces, meters every collective against the transport's
+  :class:`repro.compression.transports.WireBudget` and requires gathered
+  payloads to be tainted by a wire mark — a model-derived fp32 array
+  entering an all_gather (or a psum on a transport that declares
+  ``float_reduce_ok=False``) is flagged as a wire leak.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.analysis.flow import FlowContext, JoinAllDomain, analyze_flow
+from repro.analysis.jaxpr import Violation
+from repro.analysis.provenance import MARK_PRIM_NAME
+
+_GATHER_OPS = {"all_gather"}
+_REDUCE_OPS = {"psum", "psum_scatter", "reduce_scatter", "all_reduce"}
+_COLLECTIVES = _GATHER_OPS | _REDUCE_OPS
+
+# operands at or below this footprint are scalar side traffic (hints,
+# counters), never a model payload
+_SCALAR_BYTES = 256
+
+_TOP = frozenset({("any",)})
+
+
+def _dtype_bits(dtype) -> int:
+    return np.dtype(dtype).itemsize * 8
+
+
+def _is_float(dtype) -> bool:
+    return np.issubdtype(np.dtype(dtype), np.floating)
+
+
+class WireTaintDomain(JoinAllDomain):
+    """May-taint: which wire marks (if any) a value derives from."""
+
+    def top(self, aval):
+        return _TOP
+
+    def bottom(self):
+        return frozenset()
+
+    def join(self, a, b):
+        return a | b
+
+    def transfer(self, eqn, ins):
+        if eqn.primitive.name == MARK_PRIM_NAME:
+            p = eqn.params
+            tag = ("mark", p.get("channel", ""), p.get("part", ""),
+                   p.get("codec", ""))
+            return [ins[0] | {tag}]
+        return super().transfer(eqn, ins)
+
+    def on_eqn(self, eqn, ins, outs, ctx: FlowContext):
+        name = eqn.primitive.name
+        if name == MARK_PRIM_NAME:
+            ctx.facts.append(
+                ("mark", dict(eqn.params), eqn.invars[0].aval, ctx.where))
+        elif name in _COLLECTIVES:
+            ops = [(v.aval, t) for v, t in zip(eqn.invars, ins)]
+            ctx.facts.append(("collective", name, ops, ctx.where))
+
+
+def collect_wire_facts(closed):
+    """(marks, collectives) found by the taint flow over ``closed``.
+
+    marks: list of (params, aval, path); collectives: list of
+    (prim_name, [(aval, taint), ...], path).
+    """
+    res = analyze_flow(closed, WireTaintDomain())
+    marks, colls = [], []
+    for fact in res.context.facts:
+        if fact[0] == "mark":
+            marks.append(fact[1:])
+        else:
+            colls.append(fact[1:])
+    return marks, colls
+
+
+def _mark_elems(params: Dict, aval) -> int:
+    """Per-message wire elements at a mark site (leading axis = message
+    batch when ``batched``)."""
+    size = int(np.prod(aval.shape)) if aval.shape else 1
+    if params.get("batched") and aval.shape:
+        lead = max(int(aval.shape[0]), 1)
+        return size // lead
+    return size
+
+
+def _resolve_decl(params: Dict, decl_up, decl_down, by_name: Dict):
+    channel = params.get("channel", "")
+    if channel == "up":
+        return decl_up
+    if channel == "down":
+        return decl_down
+    return by_name.get(params.get("codec", ""))
+
+
+def _part_at_mark_dim(codec, part, params: Dict):
+    """The declared part rebuilt at the mark's own encode dimension.
+
+    Marks record the leaf/model dimension ``d`` they encoded (see
+    ``wire_mark``); mesh exchanges encode per-leaf chunks, so the exact
+    element count to audit against is the codec's declaration at THAT
+    granularity, not the caller's flat-model one. The container must not
+    drift with d — if it does, audit against the caller's declaration."""
+    d_mark = int(params.get("d", 0) or 0)
+    if not d_mark or codec is None \
+            or not hasattr(codec, "wire_declaration"):
+        return part
+    try:
+        rp = codec.wire_declaration(d_mark).part(part.part)
+    except (TypeError, ValueError):
+        return part
+    if rp is None or rp.container_bits != part.container_bits:
+        return part
+    return rp
+
+
+def _leaf_elems_ok(codec, part, got_elems: int) -> bool:
+    """Mesh exchanges encode PER-LEAF chunks, so a mark's element count
+    legitimately differs from the flat-model declaration; accept it iff
+    the codec's own declaration at the mark's granularity produces exactly
+    this count with the same container (sizes a mesh leaf could not have —
+    unpadded, or wrong pack — still fail)."""
+    if codec is None or part.part != "codes":
+        return False
+    pack = max(int(getattr(codec, "pack", 1) or 1), 1)
+    try:
+        redecl = codec.wire_declaration(got_elems * pack)
+    except (AttributeError, TypeError, ValueError):
+        return False
+    rp = redecl.part("codes")
+    return (rp is not None and rp.elems == got_elems
+            and rp.container_bits == part.container_bits)
+
+
+def check_wire_truth(closed, *, where: str, decl_up=None, decl_down=None,
+                     codec_up=None, codec_down=None, d: int = None,
+                     budget=None) -> List[Violation]:
+    """Audit one traced program against its wire declarations.
+
+    ``decl_up``/``decl_down`` are the per-direction :class:`WireDecl`s
+    (built by the caller at the model dimension ``d``); ``codec_up``/
+    ``codec_down`` additionally enable the declaration-consistency checks.
+    ``budget`` (a transport :class:`WireBudget`) arms the collective
+    checks for distributed traces.
+    """
+    out: List[Violation] = []
+    by_name = {}
+    for decl in (decl_up, decl_down):
+        if decl is not None:
+            by_name.setdefault(decl.codec, decl)
+
+    # declaration self-consistency (trace-independent)
+    for decl, codec in ((decl_up, codec_up), (decl_down, codec_down)):
+        if decl is None:
+            continue
+        if codec is not None and d is not None:
+            declared, charged = decl.message_bits, codec.message_bits(d)
+            if declared != charged:
+                out.append(Violation(
+                    "wire_truth", where,
+                    f"declaration drift for {decl.codec!r}: wire parts sum "
+                    f"to {declared} bits but message_bits({d}) charges "
+                    f"{charged}"))
+        for p in decl.parts:
+            if p.payload and p.elems and p.container_bits >= 32 \
+                    and p.charged_bits / p.elems < 16:
+                out.append(Violation(
+                    "wire_truth", where,
+                    f"{decl.codec!r} part {p.part!r} declares a "
+                    f"{p.container_bits}-bit container but charges only "
+                    f"{p.charged_bits / p.elems:.1f} bits/coord"))
+
+    marks, colls = collect_wire_facts(closed)
+    codec_of = {"up": codec_up, "down": codec_down}
+
+    for params, aval, path in marks:
+        decl = _resolve_decl(params, decl_up, decl_down, by_name)
+        codec = codec_of.get(params.get("channel", ""))
+        if codec is None and decl is not None:
+            for cand in (codec_up, codec_down):
+                if cand is not None and getattr(cand, "name", "") == decl.codec:
+                    codec = cand
+                    break
+        label = (f"{params.get('channel')}/{params.get('part')}"
+                 f" ({params.get('codec')})")
+        if decl is None:
+            out.append(Violation(
+                "wire_truth", where,
+                f"wire mark {label} at {path} matches no declaration — "
+                f"uncharged message traffic"))
+            continue
+        part = decl.part(params.get("part", ""))
+        if part is None:
+            out.append(Violation(
+                "wire_truth", where,
+                f"{decl.codec!r} ships an undeclared part "
+                f"{params.get('part')!r} at {path} — uncharged side-"
+                f"channel row"))
+            continue
+        got_bits = _dtype_bits(aval.dtype)
+        if got_bits != part.container_bits:
+            out.append(Violation(
+                "wire_truth", where,
+                f"{decl.codec!r} part {part.part!r} traces a {got_bits}-"
+                f"bit container at {path}; declaration says "
+                f"{part.container_bits} (message charges "
+                f"{part.charged_bits} bits)"))
+        got_kind = "float" if _is_float(aval.dtype) else "int"
+        if got_kind != part.kind:
+            out.append(Violation(
+                "wire_truth", where,
+                f"{decl.codec!r} part {part.part!r} traces {got_kind} "
+                f"({np.dtype(aval.dtype).name}) at {path}; declaration "
+                f"says {part.kind} — fp32 reaching the wire"
+                if got_kind == "float" else
+                f"{decl.codec!r} part {part.part!r} traces {got_kind} at "
+                f"{path}; declaration says {part.kind}"))
+        got_elems = _mark_elems(params, aval)
+        expect = _part_at_mark_dim(codec, part, params)
+        if expect.elems and got_elems != expect.elems \
+                and not _leaf_elems_ok(codec, part, got_elems):
+            out.append(Violation(
+                "wire_truth", where,
+                f"{decl.codec!r} part {part.part!r} traces {got_elems} "
+                f"elements/message at {path}; declaration says "
+                f"{expect.elems}"))
+
+    if budget is not None:
+        from repro.analysis.opbudget import check_collective_bytes
+        out.extend(check_collective_bytes(closed, where, budget.caps))
+        for prim, ops, path in colls:
+            for aval, taint in ops:
+                nbytes = (int(np.prod(aval.shape)) if aval.shape else 1) \
+                    * np.dtype(aval.dtype).itemsize
+                if nbytes <= _SCALAR_BYTES:
+                    continue
+                marked = any(t and t[0] == "mark" for t in taint)
+                if prim in _GATHER_OPS and not marked:
+                    out.append(Violation(
+                        "wire_truth", where,
+                        f"{prim} at {path} gathers a {nbytes}-byte "
+                        f"{np.dtype(aval.dtype).name} payload with no "
+                        f"wire mark — undeclared wire traffic"))
+                elif (prim in _REDUCE_OPS and _is_float(aval.dtype)
+                        and not budget.float_reduce_ok and not marked):
+                    out.append(Violation(
+                        "wire_truth", where,
+                        f"{prim} at {path} reduces a {nbytes}-byte fp32 "
+                        f"payload on a transport that declares no float "
+                        f"reduction — wire leak"))
+    return out

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.provenance import wire_mark
 from repro.compression.lattice import (IdentityQuantizer, LatticeMsg,
                                        LatticeQuantizer, QSGDQuantizer)
 from repro.compression.pipeline import LatticeWire
@@ -73,6 +74,58 @@ class Codec(Protocol):
 
     def message_bits(self, d: int) -> int:
         ...
+
+
+# ---------------------------------------------------------------------------
+# machine-readable wire declarations
+# ---------------------------------------------------------------------------
+
+class WirePart(NamedTuple):
+    """One named component of a codec's per-message wire format.
+
+    ``elems``/``container_bits`` describe what a trace must show at the
+    matching ``wire_mark`` site (the physical value crossing the wire);
+    ``charged_bits`` is this part's contribution to ``message_bits(d)``.
+    The two may legitimately differ per coordinate (``scalar`` charges its
+    entropy-coded b bits while shipping a whole int container), but a
+    payload charged sub-16-bit that traces as a >= 32-bit container is a
+    wire lie the audit rejects.
+    """
+    part: str             # "codes" | "idx" | "vals" | "gamma" | "levels"
+    elems: int            # per-message element count on the wire
+    container_bits: int   # traced dtype width at the wire_mark site
+    charged_bits: int     # contribution to message_bits(d)
+    kind: str             # "int" | "float"
+    payload: bool         # coordinate payload vs. 32-bit side-channel row
+
+
+class WireDecl(NamedTuple):
+    """A codec's declared wire format, consumed by ``analysis/wire.py``.
+
+    Replaces the prose convention ("lattice ships packed codes plus a γ
+    scalar...") with data the gate can cross-check against traces:
+    ``moduli`` are the wrap moduli the γ-overflow interval analysis must
+    prove safe (empty for non-lattice codecs), ``safety`` the declared
+    head-room factor of the wrap window.
+    """
+    codec: str
+    parts: Tuple[WirePart, ...]
+    moduli: Tuple[int, ...] = ()
+    safety: float = 0.0
+
+    @property
+    def message_bits(self) -> int:
+        return sum(p.charged_bits for p in self.parts)
+
+    def part(self, name: str) -> WirePart | None:
+        for p in self.parts:
+            if p.part == name:
+                return p
+        return None
+
+    @property
+    def side_rows(self) -> Tuple[str, ...]:
+        return tuple(p.part for p in self.parts if not p.payload)
 
 
 class CodecBase:
@@ -120,13 +173,21 @@ class IdentityCodec(CodecBase):
     bits: int = 32
 
     def encode(self, key, x, hint=None):
-        return IdentityQuantizer().encode(key, x, hint)
+        msg = IdentityQuantizer().encode(key, x, hint)
+        return LatticeMsg(
+            codes=wire_mark(msg.codes, channel="msg", part="codes",
+                            codec=self.name, d=int(x.shape[-1])),
+            gamma=msg.gamma)
 
     def decode(self, key, msg, ref=None):
         return msg.codes
 
     def message_bits(self, d: int) -> int:
         return d * 32
+
+    def wire_declaration(self, d: int) -> WireDecl:
+        return WireDecl(codec=self.name, parts=(
+            WirePart("codes", d, 32, d * 32, "float", True),))
 
 
 @dataclass(frozen=True)
@@ -140,14 +201,32 @@ class ScalarCodec(CodecBase):
     def __post_init__(self):
         object.__setattr__(self, "quant", QSGDQuantizer(bits=self.bits))
 
+    def _container(self):
+        # signed storage of levels in [-(2^(b-1)-1), 2^(b-1)-1]
+        return jnp.int8 if self.bits <= 8 else (
+            jnp.int16 if self.bits <= 16 else jnp.int32)
+
     def encode(self, key, x, hint=None):
-        return self.quant.encode(key, x, hint)
+        msg = self.quant.encode(key, x, hint)
+        # wire container honesty: the signed levels fit the b-bit int dtype;
+        # the legacy int32 working dtype is not what the wire would move
+        codes = wire_mark(msg.codes.astype(self._container()), channel="msg",
+                          part="codes", codec=self.name, d=int(x.shape[-1]))
+        gamma = wire_mark(msg.gamma, channel="msg", part="gamma",
+                          codec=self.name, d=int(x.shape[-1]))
+        return LatticeMsg(codes=codes, gamma=gamma)
 
     def decode(self, key, msg, ref=None):
         return self.quant.decode(key, msg, ref)
 
     def message_bits(self, d: int) -> int:
         return self.quant.message_bits(d)
+
+    def wire_declaration(self, d: int) -> WireDecl:
+        return WireDecl(codec=self.name, parts=(
+            WirePart("codes", d, _storage_bits(self.bits), d * self.bits,
+                     "int", True),
+            WirePart("gamma", 1, 32, 32, "float", False)))
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +285,11 @@ class LatticeCodec(CodecBase):
             codes = pack_codes(msg.codes[None].astype(jnp.uint32),
                                bits=self.bits, block=self.block)[0]
             msg = LatticeMsg(codes=codes, gamma=msg.gamma)
-        return msg
+        return LatticeMsg(
+            codes=wire_mark(msg.codes, channel="msg", part="codes",
+                            codec=self.name, d=int(x.shape[-1])),
+            gamma=wire_mark(msg.gamma, channel="msg", part="gamma",
+                            codec=self.name, d=int(x.shape[-1])))
 
     def decode(self, key, msg, ref):
         if self.pack > 1:
@@ -222,6 +305,18 @@ class LatticeCodec(CodecBase):
 
     def code_dtype(self):
         return jnp.uint8 if self.pack > 1 else self.quant.code_dtype()
+
+    def wire_declaration(self, d: int) -> WireDecl:
+        dp = pad_len(d, self.block)
+        per = self.bits if self.packed else _storage_bits(self.bits)
+        # packed wire: d_pad/pack uint8 containers each holding `pack`
+        # codes; unpacked: d_pad containers at the storage width
+        container = 8 if self.packed else _storage_bits(self.bits)
+        return WireDecl(codec=self.name, parts=(
+            WirePart("codes", dp // self.pack, container, dp * per,
+                     "int", True),
+            WirePart("gamma", 1, 32, 32, "float", False)),
+            moduli=(1 << self.bits,), safety=self.safety)
 
 
 @dataclass(frozen=True)
@@ -271,18 +366,34 @@ class GroupedLatticeCodec(CodecBase):
         return LatticeWire(bits=self.bits, pack=1, levels=levels)
 
     def message_bits(self, d: int) -> int:
+        # + γ scalar + the per-message wrap modulus (levels row): the
+        # receiver cannot snap a heterogeneous-width message without its
+        # modulus, so the row is charged wire traffic, not an exempt
+        # side channel (it is audited via wire_declaration like any part)
         return (pad_len(d, self.block) * max(self.wire_width_per_client)
-                + 32)
+                + 64)
 
     def message_bits_per_client(self, d: int) -> np.ndarray:
         dp = pad_len(d, self.block)
-        return np.asarray([dp * int(w) + 32
+        return np.asarray([dp * int(w) + 64
                            for w in self.wire_width_per_client], np.float32)
 
     def bits_for(self, idx, d: int):
         """Traced total uplink bits of the sampled subset ``idx``."""
         mb = jnp.asarray(self.message_bits_per_client(d))
         return jnp.sum(mb[idx])
+
+    def wire_declaration(self, d: int) -> WireDecl:
+        dp = pad_len(d, self.block)
+        w_max = max(self.wire_width_per_client)
+        return WireDecl(codec=self.name, parts=(
+            WirePart("codes", dp, _storage_bits(self.bits), dp * w_max,
+                     "int", True),
+            WirePart("gamma", 1, 32, 32, "float", False),
+            WirePart("levels", 1, 32, 32, "float", False)),
+            moduli=tuple(sorted({1 << int(b)
+                                 for b in self.bits_per_client})),
+            safety=self.safety)
 
     # per-message API: encode/decode one client's message at ITS bit-width
     # is not expressible with a shared jit cache — the grouped codec exists
@@ -333,7 +444,12 @@ class TopKEFCodec(CodecBase):
         k = self.k_for(target.shape[0])
         _, idx = jax.lax.top_k(jnp.abs(target), k)
         idx = idx.astype(jnp.int32)
-        return TopKMsg(idx=idx, vals=target[idx])
+        d = int(target.shape[0])
+        return TopKMsg(
+            idx=wire_mark(idx, channel="msg", part="idx", codec=self.name,
+                          d=d),
+            vals=wire_mark(target[idx], channel="msg", part="vals",
+                           codec=self.name, d=d))
 
     def encode(self, key, x, hint=None):
         return self._encode(x.astype(jnp.float32))
@@ -348,6 +464,12 @@ class TopKEFCodec(CodecBase):
 
     def message_bits(self, d: int) -> int:
         return self.k_for(d) * (32 + 32)  # (index, value) pairs
+
+    def wire_declaration(self, d: int) -> WireDecl:
+        k = self.k_for(d)
+        return WireDecl(codec=self.name, parts=(
+            WirePart("idx", k, 32, k * 32, "int", True),
+            WirePart("vals", k, 32, k * 32, "float", True)))
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.provenance import wire_mark
 from repro.compression.rotation import (DEFAULT_BLOCK, _signs,
                                         hadamard_matrix, pad_len)
 from repro.kernels.exchange import (block_geometry, fused_decode,
@@ -82,6 +83,30 @@ class LatticeWire(NamedTuple):
     bits: int
     pack: int = 1
     levels: Any = None
+
+def wire_container_dtype(wire: LatticeWire):
+    """The uint dtype one wire code physically ships in (packed wires hold
+    ``pack`` codes per uint8 byte)."""
+    if wire.pack > 1 or wire.bits <= 8:
+        return jnp.uint8
+    return jnp.uint16 if wire.bits <= 16 else jnp.uint32
+
+
+def observe_lattice_wire(codes, gammas, wire: LatticeWire, channel: str):
+    """Record the wire form of a lattice message batch for the wire-truth
+    audit: dead-code casts + identity marks that XLA eliminates, but that
+    stay visible in the traced jaxpr. The leading axis is the message
+    batch."""
+    d = int(codes.shape[-1]) * max(int(wire.pack), 1)
+    wire_mark(codes.astype(wire_container_dtype(wire)), channel=channel,
+              part="codes", codec="wire", batched=True, d=d)
+    wire_mark(jnp.asarray(gammas, jnp.float32).reshape(-1), channel=channel,
+              part="gamma", codec="wire", batched=True, d=d)
+    if wire.levels is not None:
+        wire_mark(jnp.asarray(wire.levels, jnp.float32).reshape(-1),
+                  channel=channel, part="levels", codec="wire", batched=True,
+                  d=d)
+
 
 # fp32 precision floor: the modulo decode needs y/γ (and w/γ) to keep
 # sub-integer precision, so γ must not drop below max|rot(x)|·2^-18. The
@@ -364,6 +389,7 @@ class ExchangePipeline:
         # coords come back for free and serve as downlink decode references.
         gam_up = self.gammas(hints_up, jnp.linalg.norm(Y, axis=1), d, up)
         Y_rot, codes_up = self.rotate_encode(Y, signs, u_cl, gam_up, wire=up)
+        observe_lattice_wire(codes_up, gam_up, up, channel="up")
         srv_rot = self.rotate(server[None], signs)
         QY_rot = self.snap(codes_up, srv_rot, gam_up, up)      # (s, d_pad)
 
@@ -376,6 +402,7 @@ class ExchangePipeline:
         gam_dn = self.gammas(hint_srv[None], jnp.linalg.norm(server)[None],
                              d, down)
         codes_dn = self.quantize(srv_rot, u_srv, gam_dn, down)
+        observe_lattice_wire(codes_dn, gam_dn, down, channel="down")
         QX_rot = self.snap(codes_dn, Y_rot, gam_dn, down)      # (s, d_pad)
 
         # (s+1)-averaging in rotated coordinates; inverse-rotate only the

@@ -45,13 +45,60 @@ the codec/algorithm registries: select by name
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Protocol, Tuple, runtime_checkable
+from typing import Dict, NamedTuple, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.provenance import wire_mark
 from repro.kernels.exchange import block_geometry
 from repro.compression.rotation import pad_len
+
+
+class WireBudget(NamedTuple):
+    """A transport's declared collective footprint for ONE exchanged leaf.
+
+    ``caps`` upper-bounds every collective class the wire-truth audit
+    meters (:func:`repro.analysis.jaxpr.collective_bytes` keys, bytes); a
+    zero cap asserts the collective class is absent. ``float_reduce_ok``
+    states whether model-sized fp32 payloads may enter reduce-class
+    collectives (psum / psum_scatter) — the design of ``shard_local`` and
+    ``reduce_scatter``, a wire leak on ``code_allgather``. These replace
+    the hand-pinned byte caps the PR 9 ``rs_transport_audit`` carried.
+    """
+    caps: Dict[str, int]
+    float_reduce_ok: bool
+
+
+# scalar side traffic per exchanged leaf (hint/qerr psums): a loose upper
+# bound, far below any model payload
+_SCALAR_SLACK = 256
+
+
+def _leaf_dpad(codec, d: int) -> int:
+    """Padded length of one exchanged leaf: the shard-local exchange pads
+    leaves to 1024 then the pipeline pads to its block geometry."""
+    d1 = d + (-d) % 1024
+    blk = getattr(codec, "block", None)
+    return pad_len(d1) if blk is None else pad_len(d1, blk)
+
+
+def _lattice_pair(codec_up, codec_down) -> bool:
+    return (getattr(codec_up, "family", "") == "lattice"
+            and getattr(codec_down, "family", "") == "lattice")
+
+
+def _decl_gather_bytes(decl, n: int) -> Tuple[int, int]:
+    """(int_bytes, float_bytes) an all-gather of one declared message
+    costs per device (output = n stacked messages)."""
+    ib = fb = 0
+    for p in decl.parts:
+        nbytes = n * p.elems * (p.container_bits // 8)
+        if p.kind == "int":
+            ib += nbytes
+        else:
+            fb += nbytes
+    return ib, fb
 
 
 @runtime_checkable
@@ -125,6 +172,20 @@ class ShardLocalPsum:
         """The psum reduction moves no extra redistribution payload."""
         return 0
 
+    def wire_budget(self, codec_up, codec_down, d: int, n: int) -> WireBudget:
+        """One fp32 all-reduce of the decoded partials; nothing gathered."""
+        dp = _leaf_dpad(codec_up, d)
+        return WireBudget(caps={
+            "psum_fbytes": dp * 4 + _SCALAR_SLACK,
+            "psum_ibytes": 0,
+            "psum_scatter_fbytes": 0,
+            "psum_scatter_ibytes": 0,
+            "reduce_scatter_fbytes": 0,
+            "reduce_scatter_ibytes": 0,
+            "all_gather_fbytes": 0,
+            "all_gather_ibytes": 0,
+        }, float_reduce_ok=True)
+
 
 @dataclass(frozen=True)
 class CodeAllgather:
@@ -140,9 +201,15 @@ class CodeAllgather:
                     client_axis, in_mesh, code_dtype):
         if not in_mesh:
             return qy_own
-        codes_all = jax.lax.all_gather(codes[0].astype(code_dtype),
-                                       client_axis)
-        gam_all = jax.lax.all_gather(gammas[0], client_axis)
+        # the gathered operands ARE the wire: marked in their container
+        # form so the wire-truth audit can cross-check the collective
+        d_leaf = int(codes.shape[-1]) * max(int(wire.pack), 1)
+        codes_all = jax.lax.all_gather(
+            wire_mark(codes[0].astype(code_dtype), channel="up",
+                      part="codes", codec="wire", d=d_leaf), client_axis)
+        gam_all = jax.lax.all_gather(
+            wire_mark(gammas[0], channel="up", part="gamma", codec="wire",
+                      d=d_leaf), client_axis)
         return jnp.sum(pipe.snap(codes_all, srv_rot, gam_all, wire), 0,
                        keepdims=True)
 
@@ -156,7 +223,7 @@ class CodeAllgather:
             lambda a: jax.lax.all_gather(a, client_axis), msg)
         qy_sum = jnp.zeros_like(srv)
         for j in range(n_slots):
-            m_j = jax.tree_util.tree_map(lambda a: a[j], msg_all)
+            m_j = jax.tree_util.tree_map(lambda a, j=j: a[j], msg_all)
             qy_sum = qy_sum + quant.decode(key, m_j, srv)
         return qy_sum
 
@@ -170,6 +237,22 @@ class CodeAllgather:
         if wire is not None and getattr(wire, "levels", None) is not None:
             rows += 1
         return rows * (n - 1) * 32
+
+    def wire_budget(self, codec_up, codec_down, d: int, n: int) -> WireBudget:
+        """Gathers exactly the declared uplink message (codes + side rows);
+        reduce-class collectives carry scalars only."""
+        decl = codec_up.wire_declaration(_leaf_dpad(codec_up, d))
+        ib, fb = _decl_gather_bytes(decl, n)
+        return WireBudget(caps={
+            "psum_fbytes": _SCALAR_SLACK,
+            "psum_ibytes": 0,
+            "psum_scatter_fbytes": 0,
+            "psum_scatter_ibytes": 0,
+            "reduce_scatter_fbytes": 0,
+            "reduce_scatter_ibytes": 0,
+            "all_gather_fbytes": fb + _SCALAR_SLACK,
+            "all_gather_ibytes": ib,
+        }, float_reduce_ok=False)
 
 
 @dataclass(frozen=True)
@@ -227,9 +310,18 @@ class ReduceScatterSum:
                                      tiled=True)            # (1, d_sh)
         u = jax.random.uniform(key, shard.shape, jnp.float32)
         codes_sh = pipe.quantize(shard, u, gam_rs, wire)    # (1, d_sh//pack)
-        # the wire: packed integer codes + the γ-shards row, NOT fp32
-        codes_all = jax.lax.all_gather(codes_sh[0], client_axis)
-        gam_all = jax.lax.all_gather(gam_rs[0], client_axis)  # (n,) f32
+        # the wire: packed integer codes + the γ-shards row, NOT fp32. The
+        # gather moves the codes in their declared storage container (the
+        # working uint32 of the unpacked path would quadruple the bytes);
+        # snap consumes any uint container, as on the code_allgather path.
+        cont = (jnp.uint8 if wire.pack > 1 or wire.bits <= 8 else
+                (jnp.uint16 if wire.bits <= 16 else jnp.uint32))
+        codes_all = jax.lax.all_gather(
+            wire_mark(codes_sh[0].astype(cont), channel="down",
+                      part="codes", codec="wire", d=d_sh), client_axis)
+        gam_all = jax.lax.all_gather(
+            wire_mark(gam_rs[0], channel="down", part="gamma",
+                      codec="wire", d=d_sh), client_axis)   # (n,) f32
         ref_sh = (float(n) * srv_rot).reshape(n, d_sh)
         qy_hat = pipe.snap(codes_all, ref_sh, gam_all, wire)
         return qy_hat.reshape(1, d_pad)
@@ -252,6 +344,45 @@ class ReduceScatterSum:
         if not _shardable(d_pad, n, codec_down.wire(), blk):
             return 0   # exact-psum fallback: reduction traffic only
         return codec_down.message_bits(d) + (n - 1) * 32
+
+    def wire_budget(self, codec_up, codec_down, d: int, n: int) -> WireBudget:
+        """Fused path: one psum_scatter of the fp32 partials + the coded
+        shard re-gather at the downlink width. The tight psum cap asserts
+        the fused path actually engaged (a silent fallback to plain psum
+        is a byte-budget regression, not a numerics bug)."""
+        dp = _leaf_dpad(codec_up, d)
+        fused = (_lattice_pair(codec_up, codec_down)
+                 and _shardable(dp, n, codec_down.wire(),
+                                getattr(codec_down, "block", None)))
+        if fused:
+            decl = codec_down.wire_declaration(dp)
+            codes = decl.part("codes")
+            return WireBudget(caps={
+                "psum_fbytes": _SCALAR_SLACK,
+                "psum_ibytes": 0,
+                # lax.psum_scatter lowers to the reduce_scatter
+                # primitive; cap both names so neither leaks uncapped
+                "psum_scatter_fbytes": dp * 4,
+                "psum_scatter_ibytes": 0,
+                "reduce_scatter_fbytes": dp * 4,
+                "reduce_scatter_ibytes": 0,
+                # gathered: every device ends with the full d_pad of codes
+                # (n shards of d_sh) + the (n,) γ-shards row
+                "all_gather_ibytes": codes.elems * (codes.container_bits
+                                                    // 8),
+                "all_gather_fbytes": n * 4 + _SCALAR_SLACK,
+            }, float_reduce_ok=True)
+        # generic pair / non-tiling geometry: rs+ag (or plain psum) of fp32
+        return WireBudget(caps={
+            "psum_fbytes": dp * 4 + _SCALAR_SLACK,
+            "psum_ibytes": 0,
+            "psum_scatter_fbytes": dp * 4,
+            "psum_scatter_ibytes": 0,
+            "reduce_scatter_fbytes": dp * 4,
+            "reduce_scatter_ibytes": 0,
+            "all_gather_fbytes": dp * 4 + _SCALAR_SLACK,
+            "all_gather_ibytes": 0,
+        }, float_reduce_ok=True)
 
 
 _TRANSPORTS: Dict[str, object] = {

@@ -114,10 +114,10 @@ class ModelConfig:
             f"period {len(self.schedule)} does not divide")
         return body // len(self.schedule)
 
-    def replace(self, **kw) -> "ModelConfig":
+    def replace(self, **kw) -> ModelConfig:
         return dataclasses.replace(self, **kw)
 
-    def with_long_variant(self) -> "ModelConfig":
+    def with_long_variant(self) -> ModelConfig:
         """Sliding-window variant used only for the long_500k shape."""
         if self.long_ctx_window <= 0:
             return self

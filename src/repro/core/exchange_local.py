@@ -65,6 +65,21 @@ def _pad1024(x):
     return (jnp.pad(x, (0, pad)) if pad else x), d
 
 
+def rs_gamma(pipe: ExchangePipeline, wire_dn: LatticeWire, h_sum, nrm_sum,
+             d: int):
+    """Redistribution scale of the scatter-resident coded downlink.
+
+    ``h_sum`` is the psum over clients of the per-client snap distances
+    ‖QYᵢ − rot(X_t)‖: by the triangle inequality it upper-bounds
+    ‖Σᵢ QYᵢ − n·rot(X_t)‖, so the aggregate satisfies the Lemma 3.1 wrap
+    condition at this γ. Factored out so the γ-overflow interval analysis
+    (``repro.analysis.intervals``) proves the wrap window on the SAME
+    traced derivation the exchange runs.
+    """
+    wire_rs = LatticeWire(bits=wire_dn.bits, pack=wire_dn.pack)
+    return pipe.gammas(h_sum[None], nrm_sum[None], d, wire_rs), wire_rs
+
+
 def make_shardlocal_exchange(quant_up, quant_down, mesh,
                              srv_pspecs: Dict[str, P],
                              cl_pspecs: Dict[str, P], client_axis: str,
@@ -130,8 +145,7 @@ def make_shardlocal_exchange(quant_up, quant_down, mesh,
             nrm_rs = jax.lax.psum(
                 _psum_norm(jnp.sum(jnp.square(qy_own)), model_axes),
                 client_axis)
-            wire_rs = LatticeWire(bits=wire_dn.bits, pack=wire_dn.pack)
-            gam_rs = pipe.gammas(h_rs[None], nrm_rs[None], d, wire_rs)
+            gam_rs, wire_rs = rs_gamma(pipe, wire_dn, h_rs, nrm_rs, d)
             k_rs = jax.random.fold_in(jax.random.split(k_dn)[0], kk_cl)
             qy_sum = fused_rs(pipe, wire_rs, qy_own, srv_rot, gam_rs,
                               k_rs, client_axis)
@@ -211,6 +225,12 @@ def make_shardlocal_exchange(quant_up, quant_down, mesh,
                 clients_l[k].dtype)
         for a in model_axes:
             qerr = jax.lax.psum(qerr, a)
+        # qerr varies per client slot (each device quantizes its own Y^i);
+        # committing it replicated (out_spec P()) without reducing over the
+        # client axis would publish client 0's value — the divergence class
+        # repro.analysis.divergence flags. Reduce to the sum over clients.
+        if client_in_mesh:
+            qerr = jax.lax.psum(qerr, client_axis)
         return server_new, clients_new, qerr
 
     in_specs = (srv_pspecs, cl_pspecs, cl_pspecs, P())

@@ -116,7 +116,7 @@ class QuaflState(NamedTuple):
         """Per-client uplink-codec (EF) state; () for stateless codecs."""
         return self.pop.rows["codec_up"]
 
-    def with_clients(self, clients) -> "QuaflState":
+    def with_clients(self, clients) -> QuaflState:
         """Copy with the stacked client models replaced (test helper —
         the NamedTuple ``_replace`` can't target rows inside ``pop``)."""
         return self._replace(pop=with_rows(self.pop, model=clients))

@@ -125,7 +125,7 @@ class ArrivalQueue:
 
     @classmethod
     def initial(cls, rng: np.random.Generator, lam: np.ndarray,
-                local_steps: int) -> "ArrivalQueue":
+                local_steps: int) -> ArrivalQueue:
         q = cls()
         for i in range(len(lam)):
             q.push(completion_time(rng, local_steps, lam[i]), i)
@@ -143,7 +143,7 @@ class ArrivalQueue:
     def __len__(self):
         return len(self.events)
 
-    def copy(self) -> "ArrivalQueue":
+    def copy(self) -> ArrivalQueue:
         return ArrivalQueue(self.events)
 
 

@@ -337,6 +337,18 @@ class RoundEngine:
         ``key, sub = split(key)`` schedule)."""
         return jax.make_jaxpr(self._chunk_program(length))(state, data, key)
 
+    def wire_provenance(self, state, data, key):
+        """Message/collective provenance of one traced round, for the
+        wire-truth audit: ``(closed, marks, collectives)`` where marks are
+        the ``wire_mark`` sites (params, aval, path) and collectives the
+        ``(prim, [(aval, taint), ...], path)`` facts from the taint flow.
+        Analysis imports stay lazy — tracing never pays for them unless a
+        caller asks for provenance."""
+        from repro.analysis.wire import collect_wire_facts
+        closed = self.traced_round(state, data, key)
+        marks, colls = collect_wire_facts(closed)
+        return closed, marks, colls
+
     def lowered_chunk(self, state, data, key, length: int):
         """The chunk program lowered with the donation contract of
         :meth:`run_chunk` (``donate_argnums=(0,)``) — ``.compile()`` it to

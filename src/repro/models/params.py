@@ -71,7 +71,7 @@ class Ctx:
         self.params[path] = arr
         return arr
 
-    def sub(self, prefix: str) -> "SubCtx":
+    def sub(self, prefix: str) -> SubCtx:
         return SubCtx(self, prefix, stack=0)
 
 
@@ -99,11 +99,11 @@ class SubCtx:
         self._p.params[full] = arr
         return arr
 
-    def sub(self, prefix: str) -> "SubCtx":
+    def sub(self, prefix: str) -> SubCtx:
         pre = f"{self._prefix}/{prefix}" if self._prefix else prefix
         return SubCtx(self._p, pre, stack=self._stack)
 
-    def stacked(self, prefix: str, n: int) -> "SubCtx":
+    def stacked(self, prefix: str, n: int) -> SubCtx:
         pre = f"{self._prefix}/{prefix}" if self._prefix else prefix
         assert self._stack == 0, "nested stacking unsupported"
         return SubCtx(self._p, pre, stack=n)

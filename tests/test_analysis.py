@@ -350,3 +350,225 @@ def test_matrix_covers_every_registry_algorithm():
     algs = {a for a, _ in ALL_CELLS}
     assert algs == set(registered_algorithms()) - {"fedbuff"}
     assert set(MATRIX_CODECS) == {"lattice", "lattice_packed", "topk_ef"}
+    # the heterogeneous-width cell rides quafl (the batched grouped path)
+    assert ("quafl", "lattice_grouped") in ALL_CELLS
+
+
+# ---------------------------------------------------------------------------
+# flow engine + wire-truth / γ-interval / divergence analyzers
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_on_hand_built_jaxprs():
+    """Byte accounting per collective on hand-built programs: reductions
+    charge their input avals, gathers their output avals, split by element
+    kind — and the walk reaches bodies nested under scan."""
+    from repro.analysis.jaxpr import collective_bytes
+
+    env = [("i", 4)]
+    closed = jax.make_jaxpr(lambda x: jax.lax.psum(x, "i"),
+                            axis_env=env)(jnp.ones(8, jnp.float32))
+    assert collective_bytes(closed) == {"psum_fbytes": 8 * 4}
+
+    closed = jax.make_jaxpr(lambda x: jax.lax.all_gather(x, "i"),
+                            axis_env=env)(jnp.ones(16, jnp.int32))
+    assert collective_bytes(closed) == {"all_gather_ibytes": 4 * 16 * 4}
+
+    # lax.psum_scatter binds the reduce_scatter primitive — the byte gate
+    # must charge that key, not a vacuous psum_scatter_* entry
+    closed = jax.make_jaxpr(
+        lambda x: jax.lax.psum_scatter(x, "i", tiled=True),
+        axis_env=env)(jnp.ones(8, jnp.float32))
+    assert collective_bytes(closed) == {"reduce_scatter_fbytes": 8 * 4}
+
+    def scanned(x):
+        def body(c, _):
+            return c + jax.lax.psum(c, "i"), jax.lax.all_gather(c, "i")
+        return jax.lax.scan(body, x, None, length=3)
+
+    b = collective_bytes(jax.make_jaxpr(scanned, axis_env=env)(
+        jnp.ones(8, jnp.float32)))
+    assert b["psum_fbytes"] == 8 * 4
+    assert b["all_gather_fbytes"] == 4 * 8 * 4
+
+
+def test_flow_engine_scan_carry_fixpoint():
+    """The worklist engine iterates scan carries to a fixpoint: a carry
+    clamped into [0, 1] every iteration keeps that interval instead of
+    widening to top."""
+    from repro.analysis.intervals import interval_of
+
+    def f(x):
+        def body(c, _):
+            return jnp.clip(c * 0.5, 0.0, 1.0), None
+
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    (iv,) = interval_of(f, [(0.0, 1.0)], jnp.zeros(4))
+    assert 0.0 <= iv[0] and iv[1] <= 1.0
+
+
+def test_mutation_fp32_wire_leak_detected():
+    """An fp32 array marked as the int codes payload is the wire-leak bug
+    class: the audit flags kind AND container drift; the honest container
+    at the same site is clean."""
+    from repro.analysis.provenance import wire_mark
+    from repro.analysis.wire import check_wire_truth
+    from repro.compression.codecs import LatticeCodec
+
+    codec = LatticeCodec(bits=8)
+    d = 2048
+    decl = codec.wire_declaration(d)
+
+    def leaky(x):
+        return wire_mark(x, channel="up", part="codes", codec=codec.name,
+                         d=d)
+
+    closed = jax.make_jaxpr(leaky)(jnp.ones(d, jnp.float32))
+    viols = check_wire_truth(closed, where="fixture", decl_up=decl,
+                             codec_up=codec, d=d)
+    assert any("fp32 reaching the wire" in v.detail for v in viols)
+    assert any("32-bit container" in v.detail for v in viols)
+
+    def honest(x):
+        return wire_mark(x.astype(jnp.uint8), channel="up", part="codes",
+                         codec=codec.name, d=d)
+
+    closed = jax.make_jaxpr(honest)(jnp.ones(d, jnp.float32))
+    assert check_wire_truth(closed, where="ok", decl_up=decl,
+                            codec_up=codec, d=d) == []
+
+
+def test_grouped_levels_row_audited_not_exempted():
+    """The grouped codec's per-message moduli row is charged wire traffic:
+    the declaration carries a levels part (message_bits includes it), the
+    traced row passes the audit — and a declaration WITHOUT the part trips
+    the uncharged-side-channel rule."""
+    from repro.analysis.provenance import wire_mark
+    from repro.analysis.wire import check_wire_truth
+    from repro.compression.codecs import GroupedLatticeCodec, WireDecl
+
+    codec = GroupedLatticeCodec(bits_per_client=(4, 8),
+                                wire_width_per_client=(4, 8))
+    d = 1024
+    decl = codec.wire_declaration(d)
+    assert decl.part("levels") is not None
+    assert decl.message_bits == codec.message_bits(d)
+    assert decl.moduli == (16, 256)
+
+    def ships(codes, gam, lev):
+        wire_mark(codes, channel="up", part="codes", codec=codec.name,
+                  batched=True, d=d)
+        wire_mark(gam, channel="up", part="gamma", codec=codec.name,
+                  batched=True, d=d)
+        wire_mark(lev, channel="up", part="levels", codec=codec.name,
+                  batched=True, d=d)
+        return codes
+
+    closed = jax.make_jaxpr(ships)(jnp.zeros((2, d), jnp.uint8),
+                                   jnp.zeros((2,), jnp.float32),
+                                   jnp.zeros((2,), jnp.float32))
+    assert check_wire_truth(closed, where="ok", decl_up=decl) == []
+
+    bald = WireDecl(codec=codec.name,
+                    parts=tuple(p for p in decl.parts
+                                if p.part != "levels"),
+                    moduli=decl.moduli, safety=decl.safety)
+    viols = check_wire_truth(closed, where="fixture", decl_up=bald)
+    assert any("side-channel" in v.detail for v in viols)
+
+
+def test_mutation_gamma_overflow_detected():
+    """Interval analysis proves the encode path cannot wrap at the
+    declared width — and fires when codes overflow the modulus or the
+    safety factor is too small for Lemma 3.1's window."""
+    from repro.analysis.intervals import (check_encode_intervals,
+                                          check_gamma_window)
+    from repro.compression.pipeline import ExchangePipeline, LatticeWire
+
+    pipe = ExchangePipeline(bits=8, backend="jnp")
+    wire8 = LatticeWire(bits=8, pack=1)
+    assert check_encode_intervals(pipe, wire8, 2048, (256,), "ok") == []
+    # 8-bit codes audited against a declared 4-bit modulus: overflow
+    viols = check_encode_intervals(pipe, wire8, 2048, (16,), "fixture")
+    assert [v.rule for v in viols] == ["gamma-overflow"]
+
+    assert check_gamma_window(pipe, wire8, 2048, "ok") == []
+    loose = ExchangePipeline(bits=8, backend="jnp", safety=1.5)
+    viols = check_gamma_window(loose, wire8, 2048, "fixture")
+    assert viols and all(v.rule == "gamma-overflow" for v in viols)
+
+
+def test_mutation_divergent_escape_detected():
+    """A value derived from axis_index committed through P() is device 0's
+    copy published as replicated state; resolving it with a psum over the
+    axis is clean."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.analysis.divergence import check_divergence
+    from repro.utils.compat import shard_map
+
+    mesh = AbstractMesh((("data", 4),))
+
+    def body(x):
+        return x + jax.lax.axis_index("data").astype(jnp.float32)
+
+    bad = shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                    check_vma=False)
+    viols = check_divergence(jax.make_jaxpr(bad)(jnp.ones(8)), "fixture")
+    assert [v.rule for v in viols] == ["spmd-divergence"]
+    assert "data" in viols[0].detail
+
+    def resolved(x):
+        return jax.lax.psum(
+            x + jax.lax.axis_index("data").astype(jnp.float32), "data")
+
+    ok = shard_map(resolved, mesh=mesh, in_specs=P(), out_specs=P(),
+                   check_vma=False)
+    assert check_divergence(jax.make_jaxpr(ok)(jnp.ones(8)), "ok") == []
+
+
+def test_exchange_matrix_cells_clean():
+    """Every codec × transport pair of the shard-local exchange passes the
+    wire-truth, byte-budget, divergence and γ_rs checks on the abstract
+    pod mesh."""
+    from repro.analysis.lint import _exchange_cells, analyze_exchange_cell
+    for codec, transport in _exchange_cells():
+        rep = analyze_exchange_cell(codec, transport, d=1 << 14, n=4)
+        assert rep["violations"] == [], (codec, transport,
+                                         rep["violations"])
+
+
+def test_engine_wire_provenance_hook():
+    alg, data, params0, key = _build_cell("quafl", "lattice")
+    from repro.fed.engine import RoundEngine
+    t = _traceable(alg)
+    closed, marks, colls = RoundEngine(t).wire_provenance(
+        t.init(params0), data, key)
+    assert closed.jaxpr.eqns
+    parts = {p.get("part") for p, _, _ in marks}
+    assert {"codes", "gamma"} <= parts
+    assert all(p.get("d", 0) > 0 for p, _, _ in marks)
+
+
+def test_lint_cell_listing_and_loud_only():
+    from repro.analysis.lint import list_cells, run_lint
+    cells = list_cells()
+    assert "quaflxlattice_grouped" in cells
+    assert "exchange:latticexreduce_scatter" in cells
+    assert "rs_transport" in cells
+    with pytest.raises(SystemExit):
+        run_lint(quick=True, only="definitely_not_a_cell", verbose=False)
+
+
+def test_report_is_deterministic_schema_v2():
+    """The committed report must be byte-stable: schema v2, no wall-clock
+    keys anywhere — timings go to the side dict the caller owns."""
+    import json
+    from repro.analysis.lint import run_lint
+    timings = {}
+    rep = run_lint(quick=True, only="sequentialxlattice", verbose=False,
+                   timings=timings)
+    assert rep["schema"] == "analysis.v2"
+    assert '"seconds"' not in json.dumps(rep)
+    assert rep["violations_total"] == 0
+    assert timings and "total" in timings
